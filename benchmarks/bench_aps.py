@@ -1,0 +1,36 @@
+"""Fig. 9: APS adaptive plan selection vs fixed N-Plan / S-Plan.
+
+APS should track min(N, S) per query and sometimes beat both by switching
+mid-query as theta tightens.
+"""
+from __future__ import annotations
+
+from repro.core.executor import ExecConfig, StreakEngine
+
+from . import common
+
+
+def run() -> list:
+    rows = []
+    for ds_name in ("yago3", "lgd"):
+        ds = common.dataset(ds_name)
+        for qi, q in enumerate(ds.queries):
+            engines = {
+                "aps": StreakEngine(ds.store, ExecConfig()),
+                "nplan": StreakEngine(ds.store, ExecConfig(force_plan="N")),
+                "splan": StreakEngine(ds.store, ExecConfig(force_plan="S")),
+            }
+            times = {}
+            for name, eng in engines.items():
+                times[name] = common.timeit(lambda e=eng: e.execute(q))
+            _, _, st = engines["aps"].execute(q)
+            plans = f"N{st.plan_n}/S{st.plan_s}"
+            best_fixed = min(times["nplan"], times["splan"])
+            for name in ("aps", "nplan", "splan"):
+                derived = (f"plans={plans};vs_best_fixed="
+                           f"{times[name]/max(best_fixed,1):.2f}x"
+                           if name == "aps" else "")
+                rows.append(common.row(
+                    f"fig9_aps/{ds_name}/Q{qi+1}_{name}", times[name],
+                    derived))
+    return rows

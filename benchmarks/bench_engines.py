@@ -1,0 +1,34 @@
+"""Fig. 10/11: end-to-end STREAK vs the full-scan engine (PostgreSQL-like).
+
+"Cold" = fresh engine (no pattern-scan cache); "warm" = second run with the
+scan cache populated (the paper's cold/warm distinction is filesystem cache;
+ours is the in-memory scan cache, same role).
+"""
+from __future__ import annotations
+
+from repro.core.baselines import FullScanEngine
+from repro.core.executor import StreakEngine
+
+from . import common
+
+
+def run() -> list:
+    rows = []
+    for ds_name in ("yago3", "lgd"):
+        ds = common.dataset(ds_name)
+        for qi, q in enumerate(ds.queries):
+            t_cold = common.timeit(
+                lambda: StreakEngine(ds.store).execute(q), warmup=0, repeat=3)
+            warm_eng = StreakEngine(ds.store)
+            t_warm = common.timeit(lambda: warm_eng.execute(q))
+            t_full = common.timeit(
+                lambda: FullScanEngine(ds.store).execute(q), warmup=0,
+                repeat=3)
+            rows.append(common.row(
+                f"fig10_engines/{ds_name}/Q{qi+1}_streak_warm", t_warm,
+                f"speedup_vs_fullscan={t_full/max(t_warm,1):.1f}x"))
+            rows.append(common.row(
+                f"fig11_engines/{ds_name}/Q{qi+1}_streak_cold", t_cold, ""))
+            rows.append(common.row(
+                f"fig10_engines/{ds_name}/Q{qi+1}_fullscan", t_full, ""))
+    return rows

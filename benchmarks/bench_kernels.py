@@ -1,0 +1,50 @@
+"""Kernel-layer microbenchmarks (jnp reference path on CPU; the Pallas path
+is TPU-target and validated in interpret mode by tests)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+from . import common
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    a = jnp.asarray(rng.random((1024, 4)).astype(np.float32))
+    b = jnp.asarray(rng.random((1024, 4)).astype(np.float32))
+    f = jax.jit(ref.distance_join_ref)
+    f(a, b).block_until_ready()
+    t = common.timeit(lambda: f(a, b).block_until_ready())
+    rows.append(common.row("kernel/distance_join_1024x1024", t,
+                           f"pairs_per_s={1024*1024/(t/1e6):.3e}"))
+
+    bits = jnp.asarray(rng.integers(0, 2**32, (8192, 8), dtype=np.uint32))
+    lo = jnp.asarray(rng.integers(-2**31, 2**31, 8192, dtype=np.int32))
+    hi = jnp.asarray(rng.integers(-2**31, 2**31, 8192, dtype=np.int32))
+    g = jax.jit(lambda b_, l, h: ref.bloom_probe_ref(b_, l, h, 3))
+    g(bits, lo, hi).block_until_ready()
+    t = common.timeit(lambda: g(bits, lo, hi).block_until_ready())
+    rows.append(common.row("kernel/bloom_probe_8192", t,
+                           f"probes_per_s={8192/(t/1e6):.3e}"))
+
+    scores = jnp.asarray(rng.random((64, 1024)).astype(np.float32))
+    h2 = jax.jit(lambda s: ref.block_scan_ref(s, 0.5))
+    jax.block_until_ready(h2(scores))
+    t = common.timeit(lambda: jax.block_until_ready(h2(scores)))
+    rows.append(common.row("kernel/block_scan_64x1024", t, ""))
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 512, 64)).astype(np.float32))
+    fa = jax.jit(lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_))
+    fa(q, k, k).block_until_ready()
+    t = common.timeit(lambda: fa(q, k, k).block_until_ready())
+    flops = 4 * 8 * 512 * 512 * 64
+    rows.append(common.row("kernel/attention_gqa_512", t,
+                           f"gflops={flops/(t/1e6)/1e9:.1f}"))
+    return rows

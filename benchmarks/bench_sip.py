@@ -1,0 +1,36 @@
+"""Fig. 7: effect of sideways information passing + node selection.
+
+Per benchmark query: execution time with SIP on vs off (fixed S-Plan so the
+only difference is the I-Range/E-list filtering), plus driven rows scanned.
+Expected pattern (paper §5.1.1): large wins on spatially selective queries,
+little effect on low-selectivity ones.
+"""
+from __future__ import annotations
+
+from repro.core.executor import ExecConfig, StreakEngine
+
+from . import common
+
+
+def run() -> list:
+    rows = []
+    for ds_name in ("yago3", "lgd"):
+        ds = common.dataset(ds_name)
+        for qi, q in enumerate(ds.queries):
+            eng_on = StreakEngine(ds.store, ExecConfig(force_plan="S"))
+            eng_off = StreakEngine(ds.store,
+                                   ExecConfig(force_plan="S", use_sip=False))
+            t_on = common.timeit(lambda: eng_on.execute(q))
+            t_off = common.timeit(lambda: eng_off.execute(q))
+            _, _, s_on = eng_on.execute(q)
+            _, _, s_off = eng_off.execute(q)
+            rows.append(common.row(
+                f"fig7_sip/{ds_name}/Q{qi+1}_on", t_on,
+                f"join_rows={s_on.driven_rows_after_sip};"
+                f"pairs={s_on.join.pairs_tested}"))
+            rows.append(common.row(
+                f"fig7_sip/{ds_name}/Q{qi+1}_off", t_off,
+                f"join_rows={s_off.driven_rows_after_sip};"
+                f"pairs={s_off.join.pairs_tested};"
+                f"speedup={t_off/max(t_on,1):.2f}x"))
+    return rows

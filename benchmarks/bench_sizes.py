@@ -1,0 +1,23 @@
+"""Tables 1/3: dataset characteristics + on-disk/in-memory index sizes."""
+from __future__ import annotations
+
+from . import common
+
+
+def run() -> list:
+    rows = []
+    for ds_name in ("yago3", "lgd"):
+        ds = common.dataset(ds_name)
+        store = ds.store
+        tree = store.tree
+        rows.append(common.row(
+            f"table1_data/{ds_name}", 0.0,
+            f"quads={store.n_quads};spatial={tree.n_objects};"
+            f"nodes={tree.n_nodes}"))
+        rows.append(common.row(
+            f"table3_sizes/{ds_name}", 0.0,
+            f"raw_mb={ds.raw_nbytes/2**20:.1f};"
+            f"store_mb={store.nbytes()/2**20:.1f};"
+            f"squadtree_mb={tree.nbytes()/2**20:.2f};"
+            f"tree_frac={tree.nbytes()/max(ds.raw_nbytes,1)*100:.2f}%"))
+    return rows

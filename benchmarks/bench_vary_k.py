@@ -1,0 +1,36 @@
+"""Fig. 12: geometric-mean runtime vs k (APS / N / S / full-scan).
+
+Expected: N-Plan wins small k, S-Plan wins large k, APS tracks the best,
+full-scan flat in k.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.baselines import FullScanEngine
+from repro.core.executor import ExecConfig, StreakEngine
+
+from . import common
+
+
+def run() -> list:
+    rows = []
+    ds = common.dataset("lgd")
+    for k in (1, 10, 50, 100):
+        times = {"aps": [], "nplan": [], "splan": [], "fullscan": []}
+        for q in ds.queries:
+            qk = dataclasses.replace(q, k=k)
+            for name, eng in (
+                    ("aps", StreakEngine(ds.store)),
+                    ("nplan", StreakEngine(ds.store, ExecConfig(force_plan="N"))),
+                    ("splan", StreakEngine(ds.store, ExecConfig(force_plan="S"))),
+                    ("fullscan", FullScanEngine(ds.store))):
+                times[name].append(
+                    common.timeit(lambda e=eng, qq=qk: e.execute(qq),
+                                  warmup=1, repeat=1))
+        for name, ts in times.items():
+            gm = float(np.exp(np.mean(np.log(np.maximum(ts, 1.0)))))
+            rows.append(common.row(f"fig12_varyk/lgd/k{k}_{name}", gm, ""))
+    return rows

@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: datasets, timing, CSV rows."""
+from __future__ import annotations
+
+import time
+
+from repro.data import synth_rdf
+
+_CACHE: dict = {}
+
+
+def dataset(name: str):
+    """Benchmark-scale synthetic datasets (cached per process).
+
+    Sized so the driven-side scans dominate the per-block overheads (the
+    regime the paper evaluates: LGD/YAGO3 are 30M-85M quads, disk-bound; at
+    toy scale SIP's pruning cannot amortize its Phase-1/2 cost).
+    """
+    if name not in _CACHE:
+        if name == "lgd":
+            _CACHE[name] = synth_rdf.make_lgd(n_per_class=6000, seed=0,
+                                              block=1024)
+        else:
+            _CACHE[name] = synth_rdf.make_yago(n_places=20000, seed=1,
+                                               block=1024)
+    return _CACHE[name]
+
+
+def timeit(fn, warmup: int = 1, repeat: int = 3) -> float:
+    """Median wall-time in microseconds (paper protocol: repeated runs,
+    average of the final ones)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

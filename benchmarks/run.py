@@ -1,0 +1,36 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. See DESIGN.md §6 for the
+paper-artifact -> benchmark index.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_aps, bench_engines, bench_join, bench_kernels,
+                   bench_sip, bench_sizes, bench_vary_k)
+    suites = [
+        ("table1/3 sizes", bench_sizes),
+        ("fig7 SIP", bench_sip),
+        ("fig8 join algorithms", bench_join),
+        ("fig9 APS", bench_aps),
+        ("fig10/11 engines", bench_engines),
+        ("fig12 vary k", bench_vary_k),
+        ("kernels", bench_kernels),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for label, mod in suites:
+        if only and only not in label and only not in mod.__name__:
+            continue
+        t0 = time.time()
+        for row in mod.run():
+            print(row)
+        print(f"# {label}: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""SASRec retrieval serving with STREAK block-wise top-k early termination.
+
+Trains a small SASRec for a few steps, then serves top-k retrieval over the
+catalog two ways — full blocked scan vs STREAK early-terminating scan — and
+verifies they agree while the STREAK path reads fewer blocks (the paper's
+N-Plan threshold test as a recsys serving feature).
+
+    PYTHONPATH=src python examples/serve_topk.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.recsys import InteractionStream
+from repro.models import sasrec
+from repro.serve import retrieval
+from repro.train import loop, optim
+
+
+def main() -> None:
+    cfg = sasrec.SASRecConfig(n_items=20_000, embed_dim=32, n_blocks=2,
+                              seq_len=20, d_ff=32)
+    params = sasrec.init_params(jax.random.PRNGKey(0), cfg)
+    stream = InteractionStream(cfg.n_items, cfg.seq_len, batch=64, seed=0)
+
+    def loss_fn(p, seq, pos, neg):
+        return sasrec.bpr_loss(p, seq, pos, neg, cfg)
+
+    tr = loop.Trainer(loss_fn, params,
+                      loop.TrainerConfig(ckpt_dir="/tmp/repro_sasrec",
+                                         ckpt_every=1000, log_every=20),
+                      optim.AdamWConfig(lr=1e-3, warmup_steps=10,
+                                        total_steps=200, weight_decay=0.0))
+    tr.fit(lambda s: tuple(jnp.asarray(x) for x in stream.batch(s)),
+           n_steps=60)
+    params = tr.params
+
+    # ---- retrieval: full scan vs STREAK early-out ----------------------
+    # Production catalogs are popularity-skewed and trained item norms track
+    # popularity [e.g. YouTube DNN]; model that skew explicitly so the
+    # norm-sorted block bounds are meaningful (a uniform-norm catalog has
+    # nothing to terminate early on).
+    rng = np.random.default_rng(7)
+    popularity = jnp.asarray(
+        rng.zipf(1.4, size=cfg.n_items).clip(1, 1000).astype(np.float32))
+    params["item_embed"] = params["item_embed"] \
+        * jnp.log1p(popularity)[:, None]
+
+    seq, _, _ = stream.batch(999)
+    state = sasrec.user_state(params, jnp.asarray(seq[:4]), cfg)
+    items = params["item_embed"]
+    block = 1024
+    full_s, full_i = retrieval.blocked_topk(state, items, k=10, block=block)
+
+    items_sorted, order = retrieval.sort_items_by_norm(items, block)
+    bounds = retrieval.block_bounds(items_sorted, block)
+    s2, i2, blocks_read = retrieval.streak_topk(
+        state, items_sorted, order.astype(jnp.int32), bounds, k=10,
+        block=block)
+
+    nb = -(-cfg.n_items // block)
+    print(f"\ncatalog {cfg.n_items} items in {nb} blocks of {block}")
+    print(f"STREAK early-out read {int(blocks_read)}/{nb} blocks "
+          f"({int(blocks_read)/nb*100:.0f}%)")
+    for u in range(4):
+        a = set(np.asarray(full_i[u]).tolist())
+        b = set(np.asarray(i2[u]).tolist())
+        assert a == b, "early-out must be exact"
+    print("exactness check: early-out top-10 == full-scan top-10 for all "
+          "users")
+
+
+if __name__ == "__main__":
+    main()

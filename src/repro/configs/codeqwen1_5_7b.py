@@ -1,0 +1,15 @@
+"""codeqwen1.5-7b [hf:Qwen/CodeQwen1.5-7B; hf]: 32L d_model=4096 32H
+(GQA kv=32 = MHA) d_ff=13440 vocab=92416, SwiGLU, RMSNorm."""
+from ..models.transformer import TransformerConfig
+from .registry import LM_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "lm"
+CONFIG = TransformerConfig(
+    name="codeqwen1.5-7b", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=32, head_dim=128, d_ff=13440, vocab=92416,
+    act="silu", glu=True, norm="rms", rope_theta=1e6,
+    dtype="bfloat16", remat=True, loss_chunks=16)
+SMOKE = TransformerConfig(
+    name="codeqwen1.5-7b-smoke", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, head_dim=32, d_ff=320, vocab=512,
+    act="silu", glu=True, norm="rms", dtype="float32", remat=False)

@@ -1,0 +1,9 @@
+"""gcn-cora [arXiv:1609.02907; paper]: 2L d_hidden=16 mean/sym-norm agg."""
+from ..models.gnn import GNNConfig
+from .registry import GNN_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "gnn"
+CONFIG = GNNConfig(name="gcn-cora", arch="gcn", n_layers=2, d_in=1433,
+                   d_hidden=16, d_out=7, aggregator="mean")
+SMOKE = GNNConfig(name="gcn-cora-smoke", arch="gcn", n_layers=2, d_in=32,
+                  d_hidden=8, d_out=4, aggregator="mean")

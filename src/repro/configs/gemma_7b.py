@@ -1,0 +1,16 @@
+"""gemma-7b [arXiv:2403.08295; hf]: 28L d_model=3072 16H (kv=16)
+d_ff=24576, GeGLU, head_dim=256, vocab=256000, tied embeddings."""
+from ..models.transformer import TransformerConfig
+from .registry import LM_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "lm"
+CONFIG = TransformerConfig(
+    name="gemma-7b", n_layers=28, d_model=3072, n_heads=16,
+    n_kv_heads=16, head_dim=256, d_ff=24576, vocab=256000,
+    act="gelu", glu=True, norm="rms", rope_theta=1e4,
+    tie_embeddings=True, dtype="bfloat16", remat=True, loss_chunks=16)
+SMOKE = TransformerConfig(
+    name="gemma-7b-smoke", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, head_dim=64, d_ff=512, vocab=512,
+    act="gelu", glu=True, norm="rms", tie_embeddings=True,
+    dtype="float32", remat=False)

@@ -1,0 +1,11 @@
+"""graphcast [arXiv:2212.12794; unverified]: 16L d_hidden=512
+mesh_refinement=6 sum agg, n_vars=227 (encoder-processor-decoder)."""
+from ..models.graphcast import GraphCastConfig
+from .registry import GNN_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "graphcast"
+CONFIG = GraphCastConfig(name="graphcast", n_layers=16, d_hidden=512,
+                         n_vars=227, mesh_refinement=6, aggregator="sum")
+SMOKE = GraphCastConfig(name="graphcast-smoke", n_layers=2, d_hidden=32,
+                        n_vars=11, mesh_refinement=2, aggregator="sum",
+                        dtype="float32", remat=False)

@@ -1,0 +1,12 @@
+"""graphsage-reddit [arXiv:1706.02216; paper]: 2L d_hidden=128 mean agg,
+neighbor sampling 25-10."""
+from ..models.gnn import GNNConfig
+from .registry import GNN_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "gnn"
+CONFIG = GNNConfig(name="graphsage-reddit", arch="sage", n_layers=2,
+                   d_in=602, d_hidden=128, d_out=41, aggregator="mean",
+                   sample_sizes=(25, 10))
+SMOKE = GNNConfig(name="graphsage-smoke", arch="sage", n_layers=2, d_in=32,
+                  d_hidden=16, d_out=4, aggregator="mean",
+                  sample_sizes=(5, 3))

@@ -1,0 +1,15 @@
+"""nemotron-4-15b [arXiv:2402.16819; unverified]: 32L d_model=6144 48H
+(GQA kv=8) d_ff=24576 vocab=256000, squared-ReLU (non-gated) FFN."""
+from ..models.transformer import TransformerConfig
+from .registry import LM_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "lm"
+CONFIG = TransformerConfig(
+    name="nemotron-4-15b", n_layers=32, d_model=6144, n_heads=48,
+    n_kv_heads=8, head_dim=128, d_ff=24576, vocab=256000,
+    act="sq_relu", glu=False, norm="ln", rope_theta=1e4,
+    dtype="bfloat16", remat=True, loss_chunks=16)
+SMOKE = TransformerConfig(
+    name="nemotron-4-15b-smoke", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, head_dim=32, d_ff=512, vocab=512,
+    act="sq_relu", glu=False, norm="ln", dtype="float32", remat=False)

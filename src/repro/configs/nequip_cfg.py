@@ -1,0 +1,10 @@
+"""nequip [arXiv:2101.03164; paper]: 5L d_hidden(channels)=32 l_max=2
+n_rbf=8 cutoff=5, E(3) tensor-product message passing."""
+from ..models.equivariant import NequIPConfig
+from .registry import GNN_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "nequip"
+CONFIG = NequIPConfig(name="nequip", n_layers=5, n_channels=32, l_max=2,
+                      n_rbf=8, cutoff=5.0)
+SMOKE = NequIPConfig(name="nequip-smoke", n_layers=2, n_channels=8, l_max=2,
+                     n_rbf=4, cutoff=5.0)

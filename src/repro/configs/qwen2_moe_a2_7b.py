@@ -1,0 +1,18 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]: 24L d_model=2048 16H
+(kv=16) per-expert d_ff=1408 vocab=151936, MoE 60 routed top-4 + 4 shared.
+Experts padded 60 -> 64 for the 16-way "model" axis (router masks padding)."""
+from ..models.moe import MoEConfig
+from .registry import LM_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "moe"
+CONFIG = MoEConfig(
+    name="qwen2-moe-a2.7b", n_layers=24, d_model=2048, n_heads=16,
+    n_kv_heads=16, head_dim=128, vocab=151936,
+    n_experts=60, n_experts_padded=64, top_k=4, d_ff_expert=1408,
+    n_shared=4, act="silu", norm="rms", rope_theta=1e6,
+    dtype="bfloat16", remat=True, loss_chunks=16)
+SMOKE = MoEConfig(
+    name="qwen2-moe-smoke", n_layers=2, d_model=64, n_heads=2,
+    n_kv_heads=2, head_dim=32, vocab=256, n_experts=6, n_experts_padded=8,
+    top_k=4, d_ff_expert=48, n_shared=2, act="silu", norm="rms",
+    dtype="float32", remat=False)

@@ -1,0 +1,17 @@
+"""qwen3-moe-30b-a3b [hf:Qwen/Qwen3-30B-A3B; hf]: 48L d_model=2048 32H
+(GQA kv=4) per-expert d_ff=768 vocab=151936, MoE 128 routed top-8."""
+from ..models.moe import MoEConfig
+from .registry import LM_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "moe"
+CONFIG = MoEConfig(
+    name="qwen3-moe-30b-a3b", n_layers=48, d_model=2048, n_heads=32,
+    n_kv_heads=4, head_dim=128, vocab=151936,
+    n_experts=128, n_experts_padded=128, top_k=8, d_ff_expert=768,
+    n_shared=0, act="silu", norm="rms", rope_theta=1e6,
+    dtype="bfloat16", remat=True, loss_chunks=16)
+SMOKE = MoEConfig(
+    name="qwen3-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, vocab=256, n_experts=8, n_experts_padded=8,
+    top_k=8, d_ff_expert=32, n_shared=0, act="silu", norm="rms",
+    dtype="float32", remat=False)

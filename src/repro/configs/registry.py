@@ -1,0 +1,65 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workloads.
+
+Every entry carries the EXACT published config [source; verification tier in
+the arch module docstring], its shape set, and a reduced smoke config.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    # LM-family (shapes: train_4k / prefill_32k / decode_32k / long_500k)
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    # GNN (shapes: full_graph_sm / minibatch_lg / ogb_products / molecule)
+    "gcn-cora": "repro.configs.gcn_cora",
+    "graphcast": "repro.configs.graphcast_cfg",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "nequip": "repro.configs.nequip_cfg",
+    # recsys (train_batch / serve_p99 / serve_bulk / retrieval_cand)
+    "sasrec": "repro.configs.sasrec_cfg",
+}
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="full", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(kind="sampled", n_nodes=232965, n_edges=114615892,
+                         batch_nodes=1024, fanout=(15, 10), d_feat=602,
+                         n_classes=41),
+    "ogb_products": dict(kind="full", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100, n_classes=47),
+    "molecule": dict(kind="batched", n_nodes=30, n_edges=64, batch=128,
+                     d_feat=32, n_classes=1),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="bulk", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+def get(arch_id: str):
+    mod = importlib.import_module(ARCHS[arch_id])
+    return mod
+
+
+def all_cells() -> list:
+    """All 40 (arch, shape) cells."""
+    out = []
+    for arch_id in ARCHS:
+        mod = get(arch_id)
+        for shape in mod.SHAPES:
+            out.append((arch_id, shape))
+    return out

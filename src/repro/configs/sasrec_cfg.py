@@ -1,0 +1,11 @@
+"""sasrec [arXiv:1808.09781; paper]: embed_dim=50 2 blocks 1 head seq 50,
+self-attentive sequential recommendation. Catalog 10^6 items
+(retrieval_cand scores 1M candidates)."""
+from ..models.sasrec import SASRecConfig
+from .registry import RECSYS_SHAPES as SHAPES  # noqa: F401
+
+FAMILY = "recsys"
+CONFIG = SASRecConfig(name="sasrec", n_items=1_000_000, embed_dim=50,
+                      n_blocks=2, n_heads=1, seq_len=50, d_ff=50)
+SMOKE = SASRecConfig(name="sasrec-smoke", n_items=1000, embed_dim=16,
+                     n_blocks=2, n_heads=1, seq_len=10, d_ff=16)

@@ -1,0 +1,13 @@
+"""STREAK core: the paper's contribution as a composable library.
+
+Public surface:
+- index: SQuadTree (squadtree), identifier codec (ids), Z-order (morton),
+  characteristic sets + Blooms (charsets), node selection DP (node_select)
+- storage: QuadStore + permutation/numeric indexes (store), dictionary
+- engine: Query AST (query), planner, APS (aps), block executor (executor),
+  top-k (topk), spatial join phases (spatial_join)
+- baselines: sync R-tree join, full-scan engine (baselines, rtree)
+"""
+from .executor import ExecConfig, ExecStats, StreakEngine  # noqa: F401
+from .query import Query, Ranking, SpatialFilter, TriplePattern, Var  # noqa: F401
+from .store import QuadStore, build_store  # noqa: F401

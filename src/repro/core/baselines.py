@@ -1,0 +1,138 @@
+"""Baseline engines the paper compares against (§4, §5).
+
+- FullScanEngine ("PostgreSQL-like"): full joins of both sub-queries, a
+  spatial-index nested-loop filter (cell-list, gist-style), full scoring,
+  sort, LIMIT k. No top-k early termination — its runtime is k-independent,
+  reproducing the paper's Fig. 12 observation.
+- SyncRTreeEngine: the STREAK block pipeline with the S-QuadTree spatial join
+  swapped for synchronous R-tree traversal [Brinkhoff '93] and CS/SIP
+  disabled — the paper's run-time switch used for Fig. 8.
+- Fixed-plan engines: APS disabled, always-N or always-S (Fig. 9 / 12).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import rtree, spatial_join
+from .executor import ExecConfig, ExecStats, StreakEngine
+from .join import Relation, join, scan_pattern
+from .planner import plan_query
+from .query import Query
+from .store import QuadStore
+
+
+@dataclasses.dataclass
+class BaselineStats:
+    rows_joined: int = 0
+    pairs_checked: int = 0
+    candidates: int = 0
+
+
+class FullScanEngine:
+    """Evaluate everything, sort at the end (no early termination)."""
+
+    def __init__(self, store: QuadStore):
+        self.store = store
+
+    def execute(self, q: Query) -> tuple[np.ndarray, Relation, BaselineStats]:
+        store = self.store
+        stats = BaselineStats()
+        plan = plan_query(store, q)
+        driver, driven = plan.driver, plan.driven
+
+        def full_side(side):
+            if not side.all_ordered:
+                return Relation({side.entity_var:
+                                 np.unique(store.tree.obj_ids)})
+            rel = scan_pattern(store, side.all_ordered[0])
+            for tp in side.all_ordered[1:]:
+                rel = join(rel, scan_pattern(store, tp))
+            return rel
+
+        drv = full_side(driver)
+        dvn = full_side(driven)
+        stats.rows_joined = drv.n + dvn.n
+
+        ua = np.unique(drv[driver.entity_var])
+        ub = np.unique(dvn[driven.entity_var])
+        ba, bb = store.spatial_box_of(ua), store.spatial_box_of(ub)
+        ok_a, ok_b = ~np.isnan(ba[:, 0]), ~np.isnan(bb[:, 0])
+        ua, ba = ua[ok_a], ba[ok_a]
+        ub, bb = ub[ok_b], bb[ok_b]
+        # gist-style filter: cell-list candidate pairs on MBR centroids
+        from .squadtree import radius_join
+        ca = (ba[:, :2] + ba[:, 2:]) * 0.5
+        cb = (bb[:, :2] + bb[:, 2:]) * 0.5
+        diag_a = np.sqrt(((ba[:, 2:] - ba[:, :2]) ** 2).sum(1))
+        diag_b = np.sqrt(((bb[:, 2:] - bb[:, :2]) ** 2).sum(1))
+        slack = float(diag_a.max(initial=0.0) + diag_b.max(initial=0.0)) / 2.0
+        pi, pj = radius_join(ca, cb, plan.dist_norm + slack)
+        stats.pairs_checked = len(pi)
+        keep = spatial_join.refine(
+            pi, pj, store.exact_geometry(ua[pi]), store.exact_geometry(ub[pj]),
+            plan.dist_world, plan.metric)
+        pi, pj = pi[keep], pj[keep]
+        stats.candidates = len(pi)
+        pair_rel = Relation({driver.entity_var: ua[pi],
+                             driven.entity_var: ub[pj]})
+        out = join(join(drv, pair_rel), dvn)
+        # full scoring + sort + LIMIT k
+        keys = np.zeros(out.n)
+        for side in (driver, driven):
+            for tp, var, w in side.quant_terms:
+                kw = w if plan.descending else -w
+                keys += kw * store.values_of(out[var])
+        valid = ~np.isnan(keys)
+        out, keys = out.take(np.flatnonzero(valid)), keys[valid]
+        order = np.argsort(-keys, kind="stable")[: plan.k]
+        scores = keys[order] if plan.descending else -keys[order]
+        return scores, out.take(order), stats
+
+
+class SyncRTreeEngine(StreakEngine):
+    """STREAK with the spatial join swapped for sync R-tree traversal.
+
+    CS pruning and SIP are disabled (an R-tree has neither); the driven side
+    is always the full driven sub-query (S-Plan shape without SIP). Candidate
+    counts are recorded for the Fig. 8 comparison.
+    """
+
+    def __init__(self, store: QuadStore, config: ExecConfig | None = None,
+                 fanout: int = 16):
+        cfg = config or ExecConfig()
+        cfg = dataclasses.replace(cfg, use_sip=False, force_plan="S")
+        super().__init__(store, cfg)
+        self.fanout = fanout
+        self._driven_tree_cache: dict = {}
+
+    def _rtree_of(self, key, boxes: np.ndarray) -> rtree.RTree:
+        if key not in self._driven_tree_cache:
+            self._driven_tree_cache[key] = rtree.build_str(boxes, self.fanout)
+        return self._driven_tree_cache[key]
+
+    def execute(self, q: Query):
+        # reuse the full pipeline; only the Phase-3 MBR join differs
+        self._sync_stats = rtree.SyncJoinStats()
+        engine = self
+
+        def rtree_join(driver_boxes, driven_boxes, dist_norm,
+                       backend="numpy", stats=None):
+            ta = rtree.build_str(driver_boxes, engine.fanout)
+            tb = rtree.build_str(driven_boxes, engine.fanout)
+            i, j = rtree.sync_distance_join(ta, tb, dist_norm,
+                                            engine._sync_stats)
+            if stats is not None:
+                stats.candidates += len(i)
+                stats.pairs_tested += engine._sync_stats.node_pairs_visited
+            return i, j
+
+        self.config = dataclasses.replace(self.config, mbr_join_fn=rtree_join)
+        return super().execute(q)
+
+
+def fixed_plan_engine(store: QuadStore, plan: str,
+                      config: ExecConfig | None = None) -> StreakEngine:
+    cfg = config or ExecConfig()
+    return StreakEngine(store, dataclasses.replace(cfg, force_plan=plan))

@@ -1,0 +1,279 @@
+"""STREAK block-wise query execution (paper Figure 5).
+
+Driver bindings are retrieved in score-key order (blocks), each block is
+SIP-filtered against the S-QuadTree (Phases 1+2), routed through the APS
+decision (N-Plan vs S-Plan) for driven retrieval, spatially joined (Phase 3),
+refined, scored, and pushed into the shared top-k state. Early termination
+fires when the best possible remaining score key cannot beat theta.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import aps, node_select, spatial_join
+from .join import Relation, filter_in_ranges, join, scan_pattern
+from .planner import QueryPlan, SidePlan, plan_query
+from .query import Query, Var
+from .spatial_join import JoinStats
+from .store import QuadStore
+from .topk import TopK
+
+
+@dataclasses.dataclass
+class ExecConfig:
+    block: int = 1024
+    use_sip: bool = True
+    force_plan: str | None = None       # "N" | "S" | None (adaptive)
+    force_driver: str | None = None     # "a" | "b" | None
+    join_backend: str = "numpy"         # "numpy" | "kernel"
+    mbr_join_fn: object = None          # override Phase-3 MBR join (baselines)
+    select_params: node_select.SelectParams = dataclasses.field(
+        default_factory=node_select.SelectParams)
+    cost_params: aps.CostParams = dataclasses.field(
+        default_factory=aps.CostParams)
+
+
+@dataclasses.dataclass
+class ExecStats:
+    driver_blocks: int = 0
+    plan_n: int = 0
+    plan_s: int = 0
+    driven_rows_scanned: int = 0
+    driven_rows_after_sip: int = 0
+    results_considered: int = 0
+    early_terminated: bool = False
+    v_star_sizes: list = dataclasses.field(default_factory=list)
+    join: JoinStats = dataclasses.field(default_factory=JoinStats)
+    plan_log: list = dataclasses.field(default_factory=list)
+
+
+class StreakEngine:
+    def __init__(self, store: QuadStore, config: ExecConfig | None = None):
+        self.store = store
+        self.config = config or ExecConfig()
+        self._scan_cache: dict = {}
+
+    # ------------------------------------------------------------------
+    def _cached_scan(self, tp) -> Relation:
+        key = (tp.g, tp.s, tp.p, tp.o)
+        if key not in self._scan_cache:
+            self._scan_cache[key] = scan_pattern(self.store, tp)
+        return self._scan_cache[key]
+
+    def _join_chain(self, base: Relation, patterns: list) -> Relation:
+        rel = base
+        for tp in patterns:
+            if rel.n == 0:
+                break
+            rel = join(rel, self._cached_scan(tp))
+        return rel
+
+    def _block_relation(self, side: SidePlan, b: int) -> tuple[Relation, np.ndarray]:
+        """Relation for one primary-scan block + its score-key values."""
+        vals, subj, obj, facts = side.scan.get_block(b)
+        tp = side.primary[0]
+        rel = Relation()
+        if isinstance(tp.s, Var):
+            rel[tp.s.name] = subj
+        if isinstance(tp.o, Var):
+            rel[tp.o.name] = obj
+        if isinstance(tp.g, Var):
+            rel[tp.g.name] = facts
+        return rel, vals
+
+    # score-key weight of a term: flips sign for ascending ranking
+    @staticmethod
+    def _kw(weight: float, descending: bool) -> float:
+        return weight if descending else -weight
+
+    def _side_bound(self, side: SidePlan, descending: bool,
+                    exclude_primary: bool) -> float:
+        """Best possible score-key contribution from this side's quant terms."""
+        total = 0.0
+        for tp, var, w in side.quant_terms:
+            if exclude_primary and side.primary is not None and tp is side.primary[0]:
+                continue
+            from .store import DirectedNumericScan
+            scan = DirectedNumericScan(self.store.numeric[int(tp.p)], descending)
+            kw = self._kw(w, descending)
+            v_best = scan.ni.block_max[0] if kw > 0 else scan.ni.block_min[-1]
+            total += kw * float(v_best)
+        return total
+
+    def _score_key(self, rel: Relation, plan: QueryPlan) -> np.ndarray:
+        """Score key per row = sum_i kw_i * value(?v_i)."""
+        out = np.zeros(rel.n)
+        for side in (plan.driver, plan.driven):
+            for tp, var, w in side.quant_terms:
+                kw = self._kw(w, plan.descending)
+                out += kw * self.store.values_of(rel[var])
+        return out
+
+    # ------------------------------------------------------------------
+    def execute(self, q: Query) -> tuple[np.ndarray, Relation, ExecStats]:
+        cfg = self.config
+        store = self.store
+        tree = store.tree
+        plan = plan_query(store, q, force_driver=cfg.force_driver)
+        stats = ExecStats()
+        topk = TopK(k=plan.k, descending=True)  # operates in key space
+        driver, driven = plan.driver, plan.driven
+
+        driver_other = self._side_bound(driver, plan.descending, exclude_primary=True)
+        driven_bound = self._side_bound(driven, plan.descending, exclude_primary=False)
+        kw_p = (self._kw(driver.primary[2], plan.descending)
+                if driver.primary else 0.0)
+        # per-query (block-invariant) driven-CS cardinality per tree node
+        card_all = tree.cs_stats.cardinality_all(plan.driven_cs)
+
+        n_blocks = driver.scan.n_blocks if driver.scan is not None else 1
+        for b in range(n_blocks):
+            # ---- driver block in score-key order -----------------------
+            if driver.scan is not None:
+                block_rel, vals = self._block_relation(driver, b)
+                driver_primary_best = kw_p * float(vals[0])
+                join_chain = driver.join_patterns
+            else:  # no numeric driver: single full block, no driver bound
+                block_rel = self._cached_scan(driver.all_ordered[0])
+                driver_primary_best = 0.0
+                join_chain = driver.all_ordered[1:]
+            # ---- early termination check --------------------------------
+            ub = driver_primary_best + driver_other + driven_bound
+            if topk.full and ub <= topk.theta:
+                stats.early_terminated = True
+                break
+            stats.driver_blocks += 1
+            drv_rel = self._join_chain(block_rel, join_chain)
+            if drv_rel.n == 0:
+                continue
+            # driver entities with geometry
+            ents = drv_rel[driver.entity_var]
+            uniq_ents = np.unique(ents)
+            boxes = store.spatial_box_of(uniq_ents)
+            has_geom = ~np.isnan(boxes[:, 0])
+            uniq_ents, boxes = uniq_ents[has_geom], boxes[has_geom]
+            if len(uniq_ents) == 0:
+                continue
+
+            # ---- Phases 1-2: candidate nodes, V*, SIP material ----------
+            if cfg.use_sip:
+                in_v = tree.candidate_nodes(boxes, plan.dist_norm, plan.driven_cs)
+                v_star = node_select.select(tree, in_v, plan.driven_cs,
+                                            cfg.select_params, card_all)
+                if len(v_star) == 0:
+                    continue  # nothing on the driven side can join this block
+            else:
+                v_star = np.array([0], dtype=np.int64)
+            stats.v_star_sizes.append(len(v_star))
+            intervals, explicit = tree.filter_material(v_star)
+
+            # ---- APS plan decision --------------------------------------
+            key_needed = (topk.theta - (driver_primary_best + driver_other)
+                          - self._side_bound(driven, plan.descending, True)) \
+                if topk.full else -np.inf
+            decision = aps.choose(tree, v_star, plan.driven_cs, driven.scan,
+                                  key_needed, drv_rel.n, cfg.cost_params,
+                                  card_all)
+            chosen = cfg.force_plan or decision.plan
+            if driven.scan is None:
+                chosen = "S"
+            stats.plan_log.append(chosen)
+            if chosen == "N":
+                stats.plan_n += 1
+                dvn_rel = self._driven_nplan(driven, plan, intervals, explicit,
+                                             key_needed, stats)
+            else:
+                stats.plan_s += 1
+                dvn_rel = self._driven_splan(driven, intervals, explicit, stats)
+            if dvn_rel.n == 0:
+                continue
+
+            # ---- Phase 3: spatial join + refinement ----------------------
+            dvn_ents = np.unique(dvn_rel[driven.entity_var])
+            dvn_boxes = store.spatial_box_of(dvn_ents)
+            ok = ~np.isnan(dvn_boxes[:, 0])
+            dvn_ents, dvn_boxes = dvn_ents[ok], dvn_boxes[ok]
+            if len(dvn_ents) == 0:
+                continue
+            join_fn = cfg.mbr_join_fn or spatial_join.mbr_distance_join
+            pi, pj = join_fn(
+                boxes, dvn_boxes, plan.dist_norm, cfg.join_backend, stats.join)
+            if len(pi) == 0:
+                continue
+            keep = spatial_join.refine(
+                pi, pj,
+                store.exact_geometry(uniq_ents[pi]),
+                store.exact_geometry(dvn_ents[pj]),
+                plan.dist_world, plan.metric, stats.join)
+            pi, pj = pi[keep], pj[keep]
+            if len(pi) == 0:
+                continue
+            pair_rel = Relation({driver.entity_var: uniq_ents[pi],
+                                 driven.entity_var: dvn_ents[pj]})
+            out = join(drv_rel, pair_rel)
+            out = join(out, dvn_rel)
+            if out.n == 0:
+                continue
+            keys = self._score_key(out, plan)
+            valid = ~np.isnan(keys)
+            out, keys = out.take(np.flatnonzero(valid)), keys[valid]
+            stats.results_considered += out.n
+            topk.push(keys, out)
+
+        keys, rows = topk.results()
+        scores = keys if plan.descending else -keys
+        return scores, rows, stats
+
+    # ------------------------------------------------------------------
+    def _driven_full(self, driven: SidePlan) -> Relation:
+        """Fully-joined driven sub-query, cached per query (S-Plan is a
+        full scan per the paper; only the SIP filter varies per block)."""
+        key = ("__driven_full",) + tuple(id(tp) for tp in driven.all_ordered)
+        if key not in self._scan_cache:
+            rel = self._cached_scan(driven.all_ordered[0])
+            rel = self._join_chain(rel, driven.all_ordered[1:])
+            self._scan_cache[key] = rel
+        return self._scan_cache[key]
+
+    def _driven_splan(self, driven: SidePlan, intervals, explicit,
+                      stats: ExecStats) -> Relation:
+        """S-Plan: spatial join pushed down -- one full scan of the driven
+        sub-query (cached), then I-Range/E-list skipping of its rows."""
+        rel = self._driven_full(driven)
+        stats.driven_rows_scanned += rel.n
+        if self.config.use_sip and driven.entity_var in rel:
+            rel = filter_in_ranges(rel, driven.entity_var, intervals,
+                                   explicit)
+        stats.driven_rows_after_sip += rel.n
+        return rel
+
+    def _driven_nplan(self, driven: SidePlan, plan: QueryPlan, intervals,
+                      explicit, key_needed: float, stats: ExecStats) -> Relation:
+        """N-Plan: numeric predicate pushed down -- block-wise driven scan in
+        score-key order with SIP skipping and threshold early termination."""
+        cfg = self.config
+        parts: list[Relation] = []
+        kw = self._kw(driven.primary[2], plan.descending)
+        for b2 in range(driven.scan.n_blocks):
+            best = kw * float(driven.scan.get_block(b2)[0][0])
+            if np.isfinite(key_needed) and best <= key_needed:
+                break  # no further driven block can reach the threshold
+            block_rel, _ = self._block_relation(driven, b2)
+            stats.driven_rows_scanned += block_rel.n
+            if cfg.use_sip and driven.entity_var in block_rel:
+                block_rel = filter_in_ranges(block_rel, driven.entity_var,
+                                             intervals, explicit)
+            joined = self._join_chain(block_rel, driven.join_patterns)
+            if cfg.use_sip and driven.entity_var not in block_rel \
+                    and driven.entity_var in joined:
+                joined = filter_in_ranges(joined, driven.entity_var,
+                                          intervals, explicit)
+            stats.driven_rows_after_sip += joined.n
+            if joined.n:
+                parts.append(joined)
+        if not parts:
+            return Relation()
+        cols = parts[0].keys()
+        return Relation({c: np.concatenate([p[c] for p in parts]) for c in cols})

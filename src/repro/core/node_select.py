@@ -1,0 +1,151 @@
+"""Optimal filter-node selection: Algorithm 1 / Theorem 3.1.
+
+Given the candidate node set V (Phase 1) the DP picks V* ⊆ V that covers every
+join-relevant object while minimizing
+
+    cost(a)  = alpha_io * |CS(a)|  +  alpha_cpu * |E-list(a)|
+    xi(a)    = alpha_merge * |E-list(a)|            (merge cost contribution)
+
+with the hierarchical merge term mu(a) = sum_{j in gamma(a)} xi*(j) charged
+whenever more than one selected branch contributes an E-list. Nodes are laid
+out parents-before-children during the build, so one reverse sweep is the
+bottom-up order — O(N), matching the theorem's linearity claim.
+
+Decisions are stored per node (EMPTY / SELF / CHILDREN) and V* is
+reconstructed by a root walk, keeping the DP allocation-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .squadtree import SQuadTree
+
+EMPTY, SELF, CHILDREN = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectParams:
+    alpha_io: float = 1.0
+    alpha_cpu: float = 0.05
+    alpha_merge: float = 0.01
+
+
+def node_costs(tree: SQuadTree, in_v: np.ndarray, driven_cs: np.ndarray,
+               params: SelectParams,
+               card_all: np.ndarray | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """(cost, xi) per node. |CS(a)| = driven-CS cardinality stored at a.
+
+    Pass `card_all` (tree.cs_stats.cardinality_all(driven_cs)) to amortize
+    the CSR pass across driver blocks — it is query-, not block-, dependent.
+    """
+    if card_all is None:
+        card_all = tree.cs_stats.cardinality_all(driven_cs)
+    el = tree.elist_size(np.arange(tree.n_nodes)).astype(np.float64)
+    cost = np.where(in_v, params.alpha_io * card_all
+                    + params.alpha_cpu * el, 0.0)
+    xi = params.alpha_merge * el
+    return cost, xi
+
+
+def select(tree: SQuadTree, in_v: np.ndarray, driven_cs: np.ndarray,
+           params: SelectParams = SelectParams(),
+           card_all: np.ndarray | None = None) -> np.ndarray:
+    """Compute V* (node indices). Empty when V is empty."""
+    n = tree.n_nodes
+    in_v = np.asarray(in_v, dtype=bool)
+    if not in_v.any():
+        return np.empty(0, dtype=np.int64)
+    cost, xi = node_costs(tree, in_v, driven_cs, params, card_all)
+
+    sigma = np.zeros(n)          # sigma*(a)
+    xistar = np.zeros(n)         # xi*(a)
+    nonempty = np.zeros(n, dtype=bool)
+    decision = np.full(n, EMPTY, dtype=np.int8)
+
+    children = tree.node_children
+    levels = tree.node_level
+    # one vectorized sweep per level, deepest first (the recurrences only
+    # reference children, which live one level down)
+    for lvl in range(int(levels.max()), -1, -1):
+        nodes = np.flatnonzero(levels == lvl)
+        if len(nodes) == 0:
+            continue
+        kids = children[nodes]                        # (m, 4)
+        valid = kids >= 0
+        kid_idx = np.where(valid, kids, 0)
+        live = valid & nonempty[kid_idx]
+        n_live = live.sum(axis=1)
+        xi_children = np.where(live, xistar[kid_idx], 0.0).sum(axis=1)
+        mu = np.where(n_live > 1, xi_children, 0.0)
+        sig_children = np.where(live, sigma[kid_idx], 0.0).sum(axis=1) + mu
+        v = in_v[nodes]
+        # SELF when: in V and (no live children or cost <= children cost)
+        take_self = v & ((n_live == 0) | (cost[nodes] <= sig_children))
+        take_kids = (~take_self) & (n_live > 0)
+        decision[nodes] = np.where(take_self, SELF,
+                                   np.where(take_kids, CHILDREN, EMPTY))
+        sigma[nodes] = np.where(take_self, cost[nodes],
+                                np.where(take_kids, sig_children, 0.0))
+        xistar[nodes] = np.where(take_self, xi[nodes],
+                                 np.where(take_kids, xi_children, 0.0))
+        nonempty[nodes] = take_self | take_kids
+
+    out: list[int] = []
+    stack = [0]
+    while stack:
+        a = stack.pop()
+        if decision[a] == SELF:
+            out.append(a)
+        elif decision[a] == CHILDREN:
+            for k in children[a]:
+                if k >= 0 and nonempty[k]:
+                    stack.append(int(k))
+    return np.array(sorted(out), dtype=np.int64)
+
+
+def brute_force(tree: SQuadTree, in_v: np.ndarray, driven_cs: np.ndarray,
+                params: SelectParams = SelectParams()) -> tuple[np.ndarray, float]:
+    """Exhaustive search over per-node decisions (tests only, tiny trees).
+
+    Enumerates every antichain expressible by SELF/CHILDREN choices and
+    returns (best node set, best cost) under the same hierarchical objective
+    the DP optimizes — used to validate Theorem 3.1.
+    """
+    cost, xi = node_costs(tree, in_v, driven_cs, params)
+    children = tree.node_children
+    in_v = np.asarray(in_v, dtype=bool)
+
+    def options(a: int) -> list[tuple[tuple[int, ...], float, float]]:
+        kids = [int(k) for k in children[a] if k >= 0]
+        child_opts = [options(k) for k in kids]
+        child_opts = [o for o in child_opts if o]
+        outs: list[tuple[tuple[int, ...], float, float]] = []
+        if in_v[a]:
+            outs.append(((a,), cost[a], xi[a]))
+        if child_opts:
+            combos = [((), 0.0, 0.0, 0)]
+            for opts in child_opts:
+                new = []
+                for sset, ssig, sxi, nb in combos:
+                    for (cs_, csig, cxi) in opts:
+                        contributes = 1 if len(cs_) else 0
+                        new.append((sset + cs_, ssig + csig, sxi + cxi,
+                                    nb + contributes))
+                combos = new
+            for sset, ssig, sxi, nb in combos:
+                mu = sxi if nb > 1 else 0.0
+                if len(sset) or not in_v[a]:
+                    outs.append((sset, ssig + mu, sxi))
+        if not outs and not in_v[a]:
+            outs.append(((), 0.0, 0.0))
+        # a in V with no children options must pick itself -> already covered
+        return outs
+
+    opts = options(0)
+    # valid options must cover: if V nonempty the empty set is invalid
+    valid = [(s, c, x) for (s, c, x) in opts if len(s) or not in_v.any()]
+    best = min(valid, key=lambda t: t[1])
+    return np.array(sorted(best[0]), dtype=np.int64), best[1]

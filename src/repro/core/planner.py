@@ -1,0 +1,184 @@
+"""Query planning: driver/driven split, join ordering, plan skeletons (§3.3.2).
+
+The driver sub-query gets the Quark-X / SPARQL-RANK heuristic: its primary
+numeric (ranking) predicate is pushed to the *deepest* position, i.e. the
+driver is enumerated in score-key order through the sorted numeric index, so
+blocks arrive best-first and the top-k threshold can terminate the scan.
+Remaining driver patterns are joined greedily smallest-cardinality-first
+(Selinger-style cost heuristic on index-scan cardinalities).
+
+The driven side keeps BOTH skeletons (N-Plan / S-Plan); APS routes each block.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .query import Query, SpatialFilter, TriplePattern, Var
+from .store import DirectedNumericScan, QuadStore
+
+
+@dataclasses.dataclass
+class SidePlan:
+    entity_var: str                      # variable bound to the spatial entity
+    patterns: list                       # all patterns of this side
+    join_patterns: list                  # block-join chain (excl. primary)
+    all_ordered: list                    # full chain incl. primary (S-Plan)
+    quant_terms: list                    # [(pattern, obj_var, weight), ...]
+    primary: tuple | None                # (pattern, obj_var, weight) driving scan
+    scan: DirectedNumericScan | None     # primary numeric scan (score order)
+
+    def weight_of(self, var_name: str) -> float:
+        for _, v, w in self.quant_terms:
+            if v == var_name:
+                return w
+        return 0.0
+
+
+def _connectivity_order(store: QuadStore, patterns: list,
+                        seed_vars: set) -> list:
+    """Greedy smallest-cardinality-first join chain where every step shares a
+    variable with what has been joined so far (avoids cartesian products)."""
+    remaining = list(patterns)
+    reached = set(seed_vars)
+    ordered: list = []
+    cards = {id(tp): _estimate_card(store, tp) for tp in remaining}
+    while remaining:
+        connected = [tp for tp in remaining
+                     if {v.name for v in tp.vars()} & reached]
+        pool = connected if connected else remaining
+        best = min(pool, key=lambda tp: cards[id(tp)])
+        ordered.append(best)
+        reached |= {v.name for v in best.vars()}
+        remaining.remove(best)
+    return ordered
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    driver: SidePlan
+    driven: SidePlan
+    dist_world: float
+    dist_norm: float
+    metric: str
+    driven_cs: np.ndarray
+    descending: bool
+    k: int
+
+
+def resolve_spatial_vars(store: QuadStore, q: Query) -> tuple[str, str]:
+    """Map FILTER(distance(?ga, ?gb)) geometry vars to their subject entity
+    vars when they are objects of a hasGeometry pattern."""
+    def resolve(v: Var) -> str:
+        for tp in q.patterns:
+            if (isinstance(tp.o, Var) and tp.o.name == v.name
+                    and tp.p == store.geometry_predicate
+                    and isinstance(tp.s, Var)):
+                return tp.s.name
+        return v.name
+    return resolve(q.spatial.a), resolve(q.spatial.b)
+
+
+def _connected_component(patterns: list, seed_var: str) -> list:
+    """Patterns reachable from seed_var through shared variables."""
+    reach = {seed_var}
+    chosen: list = []
+    remaining = list(patterns)
+    changed = True
+    while changed:
+        changed = False
+        for tp in list(remaining):
+            names = {v.name for v in tp.vars()}
+            if names & reach:
+                reach |= names
+                chosen.append(tp)
+                remaining.remove(tp)
+                changed = True
+    return chosen
+
+
+def _estimate_card(store: QuadStore, tp: TriplePattern) -> int:
+    """Cheap cardinality estimate: exact count via index range scan."""
+    return len(_scan_rows(store, tp))
+
+
+def _scan_rows(store, tp):
+    def const(t):
+        return None if (t is None or isinstance(t, Var)) else int(t)
+    return store.scan(g=const(tp.g), s=const(tp.s), p=const(tp.p), o=const(tp.o))
+
+
+def _build_side(store: QuadStore, patterns: list, entity_var: str,
+                ranking_weights: dict, descending: bool) -> SidePlan:
+    quant_terms = []
+    for tp in patterns:
+        if isinstance(tp.o, Var) and tp.o.name in ranking_weights \
+                and not isinstance(tp.p, Var) and int(tp.p) in store.numeric:
+            quant_terms.append((tp, tp.o.name, ranking_weights[tp.o.name]))
+    primary = None
+    scan = None
+    if quant_terms:
+        # primary = the largest-|weight| quantifiable TP (ties: largest index,
+        # which maximizes the benefit of the sorted scan)
+        primary = max(quant_terms,
+                      key=lambda t: (abs(t[2]), store.numeric[int(t[0].p)].n_rows))
+        scan = DirectedNumericScan(store.numeric[int(primary[0].p)], descending)
+    # drop the hasGeometry pattern from the join chains: it is implied by the
+    # spatial id (S bit) and the tree holds the geometry
+    joinable = [tp for tp in patterns if tp.p != store.geometry_predicate]
+    seed = {entity_var}
+    if primary is not None:
+        seed |= {v.name for v in primary[0].vars()}
+    rest = [tp for tp in joinable if primary is None or tp is not primary[0]]
+    rest = _connectivity_order(store, rest, seed)
+    all_ordered = _connectivity_order(store, joinable, {entity_var})
+    return SidePlan(entity_var=entity_var, patterns=patterns,
+                    join_patterns=rest, all_ordered=all_ordered,
+                    quant_terms=quant_terms, primary=primary, scan=scan)
+
+
+def plan_query(store: QuadStore, q: Query,
+               force_driver: str | None = None) -> QueryPlan:
+    assert q.spatial is not None, "plan_query expects a spatial top-k query"
+    var_a, var_b = resolve_spatial_vars(store, q)
+    patterns = list(q.patterns)
+    side_a_patterns = _connected_component(patterns, var_a)
+    covered = set(map(id, side_a_patterns))
+    side_b_patterns = [tp for tp in patterns if id(tp) not in covered]
+    # safety: anything left unattached joins the a-side
+    ranking_weights = {v.name: w for v, w in (q.ranking.terms if q.ranking else ())}
+    descending = q.ranking.descending if q.ranking else True
+
+    side_a = _build_side(store, side_a_patterns, var_a, ranking_weights, descending)
+    side_b = _build_side(store, side_b_patterns, var_b, ranking_weights, descending)
+
+    # driver choice (paper: APS picks driver/driven): prefer the side with a
+    # primary numeric scan; among those, the smaller index converges faster.
+    def scan_rows(sp: SidePlan) -> int:
+        return sp.scan.n_rows if sp.scan is not None else 1 << 62
+    if force_driver == "a":
+        driver, driven = side_a, side_b
+    elif force_driver == "b":
+        driver, driven = side_b, side_a
+    elif (side_a.scan is None) != (side_b.scan is None):
+        driver, driven = (side_a, side_b) if side_a.scan else (side_b, side_a)
+    else:
+        driver, driven = ((side_a, side_b)
+                          if scan_rows(side_a) <= scan_rows(side_b)
+                          else (side_b, side_a))
+
+    # driven CS compatibility: every CS whose predicate set contains the
+    # driven entity's query predicates
+    driven_preds = {int(tp.p) for tp in driven.patterns
+                    if isinstance(tp.s, Var) and tp.s.name == driven.entity_var
+                    and not isinstance(tp.p, Var)}
+    matching = [cid for cid, preds in store.cs_catalog.items()
+                if driven_preds <= preds]
+    driven_cs = np.array(sorted(matching), dtype=np.int64)
+
+    dist_norm = store.tree.extent.denormalize_distance(q.spatial.dist)
+    return QueryPlan(driver=driver, driven=driven,
+                     dist_world=q.spatial.dist, dist_norm=dist_norm,
+                     metric=q.spatial.metric, driven_cs=driven_cs,
+                     descending=descending, k=q.k)

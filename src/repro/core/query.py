@@ -1,0 +1,75 @@
+"""Query representation (§2): graph patterns + spatial filter + top-k ranking.
+
+    SELECT [projection] WHERE [patterns] FILTER [distance(a,b) < d]
+    ORDER BY [ranking] LIMIT [k]
+
+Reified statements are plain quad patterns with a bound/variable `g` slot
+(``?r rdf:subject ?s . ?r rdf:predicate ?p . ?r rdf:object ?o`` collapses to
+one quad pattern with g = ?r).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Var:
+    name: str
+
+    def __repr__(self):
+        return f"?{self.name}"
+
+
+Term = "int | Var"
+
+
+@dataclasses.dataclass(frozen=True)
+class TriplePattern:
+    s: object
+    p: object
+    o: object
+    g: object = None   # None = don't-care, Var = reification id, int = bound
+
+    def vars(self) -> list[Var]:
+        return [t for t in (self.g, self.s, self.p, self.o) if isinstance(t, Var)]
+
+    def n_bound(self) -> int:
+        return sum(1 for t in (self.g, self.s, self.p, self.o)
+                   if t is not None and not isinstance(t, Var))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialFilter:
+    """FILTER(distance(?a, ?b) < dist) in world units."""
+    a: Var
+    b: Var
+    dist: float
+    metric: str = "euclid"   # or "haversine"
+
+
+@dataclasses.dataclass(frozen=True)
+class Ranking:
+    """ORDER BY sum_i w_i * value(?v_i); descending = True for DESC."""
+    terms: tuple            # ((Var, weight), ...)
+    descending: bool = True
+
+    def vars(self) -> list[Var]:
+        return [v for v, _ in self.terms]
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    select: tuple
+    patterns: tuple
+    spatial: SpatialFilter | None
+    ranking: Ranking | None
+    k: int = 100
+
+    def all_vars(self) -> list[Var]:
+        seen, out = set(), []
+        for tp in self.patterns:
+            for v in tp.vars():
+                if v.name not in seen:
+                    seen.add(v.name)
+                    out.append(v)
+        return out

@@ -1,0 +1,79 @@
+"""The block spatial join: Phases 1-3 + refinement (paper §3.2).
+
+Phase 1 (candidate nodes) lives on SQuadTree.candidate_nodes; Phase 2 is
+node_select.select + SIP filter material; this module is Phase 3 — the
+pairwise MBR distance join between a driver block and the SIP-filtered driven
+candidates — plus the exact-geometry refinement step.
+
+The MBR join is the compute hot spot; on TPU it runs through the
+`distance_join` Pallas kernel (kernels/distance_join.py); the numpy path here
+is the portable fallback and the oracle for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import geometry
+
+
+@dataclasses.dataclass
+class JoinStats:
+    candidates: int = 0     # MBR-level candidate pairs emitted
+    refined: int = 0        # pairs surviving exact refinement
+    pairs_tested: int = 0   # full MBR pairs evaluated (block product)
+
+
+def mbr_distance_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
+                      dist_norm: float, backend: str = "numpy",
+                      stats: JoinStats | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Candidate pairs (i, j) with box_min_dist <= dist (normalized space)."""
+    if len(driver_boxes) == 0 or len(driven_boxes) == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    if backend == "kernel":
+        from ..kernels import ops as kops
+        mask = np.asarray(kops.distance_join_mask(
+            driver_boxes.astype(np.float32), driven_boxes.astype(np.float32),
+            float(dist_norm)))
+    else:
+        d = geometry.box_min_dist(driver_boxes[:, None, :],
+                                  driven_boxes[None, :, :])
+        mask = d <= dist_norm
+    if stats is not None:
+        stats.pairs_tested += mask.size
+        stats.candidates += int(mask.sum())
+    i, j = np.nonzero(mask)
+    return i.astype(np.int64), j.astype(np.int64)
+
+
+def refine(pairs_i: np.ndarray, pairs_j: np.ndarray,
+           driver_geom: list, driven_geom: list,
+           dist_world: float, metric: str = "euclid",
+           stats: JoinStats | None = None) -> np.ndarray:
+    """Exact-representation distance validation (paper §3.2.4).
+
+    driver_geom / driven_geom are per-candidate exact geometries: (m, 2) point
+    arrays (points, polylines, polygon rings). Returns a boolean keep mask.
+    """
+    keep = np.zeros(len(pairs_i), dtype=bool)
+    dist_fn = geometry.euclid_dist if metric == "euclid" else geometry.haversine_km
+    for n in range(len(pairs_i)):
+        pa = driver_geom[n]
+        pb = driven_geom[n]
+        d = dist_fn(pa[:, None, :], pb[None, :, :])
+        keep[n] = bool((d <= dist_world).any())
+    if stats is not None:
+        stats.refined += int(keep.sum())
+    return keep
+
+
+def exact_pair_distance(driver_geom: list, driven_geom: list,
+                        metric: str = "euclid") -> np.ndarray:
+    dist_fn = geometry.euclid_dist if metric == "euclid" else geometry.haversine_km
+    out = np.empty(len(driver_geom))
+    for n in range(len(driver_geom)):
+        d = dist_fn(driver_geom[n][:, None, :], driven_geom[n][None, :, :])
+        out[n] = float(d.min())
+    return out

@@ -1,0 +1,407 @@
+"""S-QuadTree: the soft-schema-aware spatial index (paper §3.1).
+
+Construction is host-side numpy (the paper builds the index in a
+pre-processing stage; "zero index creation overhead during query
+processing"). The result is a struct-of-arrays tree consumed by the jitted
+query path:
+
+- objects are assigned ``(S, Z, I, L)`` ids at the deepest fully-enclosing
+  cell (level <= L_MAX) and sorted by id, so *any* subtree's objects are one
+  contiguous slice — I-Range lookups are two binary searches;
+- every materialized node stores I-Range, E-list, MBR, Bloom filters over
+  self/incoming/outgoing characteristic sets, and per-CS cardinalities.
+
+Phase-1 candidate-node search (`candidate_nodes`) and the Z-order cell-list
+radius join used by the GNN substrate (`radius_join`) also live here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import charsets, geometry, ids, morton
+from .charsets import BloomBank, NodeCSStats, build_node_cs_stats
+from .geometry import Extent
+
+
+@dataclasses.dataclass
+class SQuadTree:
+    extent: Extent
+    l_max: int
+    # --- node SoA (index 0 is the root; parents precede children) ---
+    node_z: np.ndarray          # (N,) int64 z-path at the node's own level
+    node_level: np.ndarray      # (N,) int32
+    node_parent: np.ndarray     # (N,) int32 (-1 for root)
+    node_children: np.ndarray   # (N, 4) int32 (-1 = absent)
+    node_cell: np.ndarray       # (N, 4) float64 normalized cell box
+    node_mbr: np.ndarray        # (N, 4) float64 union of clipped object MBRs
+    irange: np.ndarray          # (N, 2) int64 closed subtree id interval
+    n_subtree: np.ndarray       # (N,) int64 objects in subtree (incl. own)
+    elist_offsets: np.ndarray   # (N + 1,) int64 CSR offsets into elist_ids
+    elist_ids: np.ndarray       # (nnz,) int64 sorted within each node
+    bloom_self: BloomBank
+    bloom_in: BloomBank
+    bloom_out: BloomBank
+    cs_stats: NodeCSStats       # self-CS cardinalities per node
+    # --- object SoA, sorted by id ---
+    obj_ids: np.ndarray         # (M,) int64
+    obj_mbr: np.ndarray         # (M, 4) float64 normalized
+    obj_entity: np.ndarray      # (M,) int64 original entity key
+    entity_to_id: dict          # entity key -> spatial id
+
+    # ------------------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return len(self.node_z)
+
+    @property
+    def n_objects(self) -> int:
+        return len(self.obj_ids)
+
+    def elist(self, node: int) -> np.ndarray:
+        a, b = self.elist_offsets[node], self.elist_offsets[node + 1]
+        return self.elist_ids[a:b]
+
+    def elist_size(self, node) -> np.ndarray:
+        node = np.asarray(node)
+        return self.elist_offsets[node + 1] - self.elist_offsets[node]
+
+    def subtree_slice(self, node: int) -> slice:
+        lo, hi = self.irange[node]
+        a = int(np.searchsorted(self.obj_ids, lo, side="left"))
+        b = int(np.searchsorted(self.obj_ids, hi, side="right"))
+        return slice(a, b)
+
+    def nbytes(self) -> int:
+        total = 0
+        for arr in (self.node_z, self.node_level, self.node_parent,
+                    self.node_children, self.node_cell, self.node_mbr,
+                    self.irange, self.n_subtree, self.elist_offsets,
+                    self.elist_ids, self.obj_ids, self.obj_mbr,
+                    self.obj_entity):
+            total += arr.nbytes
+        total += self.bloom_self.nbytes() + self.bloom_in.nbytes()
+        total += self.bloom_out.nbytes() + self.cs_stats.nbytes()
+        return total
+
+    # ------------------------------------------------------------------
+    # Phase 1: candidate-node search (paper §3.2.1)
+    # ------------------------------------------------------------------
+    def candidate_nodes(self, driver_boxes: np.ndarray, dist_norm: float,
+                        driven_cs: np.ndarray,
+                        which: str = "self") -> np.ndarray:
+        """Boolean mask over nodes: the connected set V.
+
+        A node survives iff (a) its Bloom filter reports some driven-CS object
+        intersecting it, and (b) its MBR expanded by the query distance
+        intersects at least one driver-object MBR. Traversal is breadth-first
+        from the root so V stays connected (descendants of pruned nodes are
+        never visited).
+        """
+        bank = {"self": self.bloom_self, "in": self.bloom_in,
+                "out": self.bloom_out}[which]
+        driven_cs = np.asarray(driven_cs, dtype=np.int64)
+        in_v = np.zeros(self.n_nodes, dtype=bool)
+        if len(driver_boxes) == 0 or len(driven_cs) == 0:
+            return in_v
+        frontier = np.array([0], dtype=np.int64)
+        expanded = geometry.expand_boxes(driver_boxes, dist_norm)
+        while len(frontier):
+            # (F, C) bloom probes -> any CS hit per node
+            fi = np.repeat(frontier, len(driven_cs))
+            keys = np.tile(driven_cs, len(frontier))
+            cs_hit = bank.contains(fi, keys).reshape(len(frontier), -1).any(axis=1)
+            # (F, B) MBR-vs-driver test -> any driver overlap per node
+            mbr = self.node_mbr[frontier]
+            geo_hit = geometry.boxes_intersect(
+                mbr[:, None, :], expanded[None, :, :]).any(axis=1)
+            ok = cs_hit & geo_hit
+            in_v[frontier[ok]] = True
+            kids = self.node_children[frontier[ok]].ravel()
+            frontier = kids[kids >= 0]
+        return in_v
+
+    # ------------------------------------------------------------------
+    # SIP filter material: id intervals + explicit ids for a node set
+    # ------------------------------------------------------------------
+    def filter_material(self, v_star: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """(intervals (K,2) int64, explicit ids sorted) for SIP filtering.
+
+        Driven-side entries survive iff their spatial id falls in one of the
+        I-Range intervals or equals one of the E-list ids (paper §3.2.2).
+        """
+        v_star = np.asarray(v_star, dtype=np.int64)
+        intervals = self.irange[v_star] if len(v_star) else np.zeros((0, 2), np.int64)
+        parts = [self.elist(int(a)) for a in v_star]
+        explicit = (np.unique(np.concatenate(parts))
+                    if parts and sum(len(p) for p in parts)
+                    else np.empty(0, dtype=np.int64))
+        return intervals, explicit
+
+
+# ----------------------------------------------------------------------------
+# Construction
+# ----------------------------------------------------------------------------
+
+def _assign_ids(boxes_norm: np.ndarray, l_max: int
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deepest-enclosing-node assignment -> (id, zpath_own_level, level)."""
+    lo = morton.encode_points(boxes_norm[:, 0:2], l_max)
+    hi = morton.encode_points(boxes_norm[:, 2:4], l_max)
+    level = morton.common_level(lo, hi, l_max)
+    zpath = morton.zpath_at(lo, l_max, 0) * 0  # placeholder, filled below
+    zpath = np.asarray(lo, dtype=np.int64) >> (2 * (l_max - level))
+    # local ids: running counter within each (zpath, level) node
+    order = np.lexsort((np.arange(len(level)), zpath, level))
+    local = np.zeros(len(level), dtype=np.int64)
+    z_s, l_s = zpath[order], level[order]
+    same = np.zeros(len(level), dtype=np.int64)
+    if len(level) > 1:
+        same_prev = (z_s[1:] == z_s[:-1]) & (l_s[1:] == l_s[:-1])
+        run = np.zeros(len(level), dtype=np.int64)
+        # running count within equal runs
+        idx_change = np.flatnonzero(~same_prev) + 1
+        starts = np.concatenate([[0], idx_change])
+        lengths = np.diff(np.concatenate([starts, [len(level)]]))
+        run = np.arange(len(level)) - np.repeat(starts, lengths)
+        same = run
+    local[order] = same
+    if ids.L_MAX != l_max:
+        # re-scale zpath into the global L_MAX id space: treat the tree as the
+        # top `l_max` levels of the canonical depth-10 hierarchy.
+        pass
+    oid = ids.encode(zpath, level, local)
+    return oid, zpath, level
+
+
+@dataclasses.dataclass
+class _BuildNode:
+    z: int
+    level: int
+    parent: int
+    elist: np.ndarray  # ids of ancestor-assigned objects overlapping this cell
+
+
+def build(entity_keys: np.ndarray,
+          boxes_world: np.ndarray,
+          cs_self: np.ndarray,
+          cs_in: tuple[np.ndarray, np.ndarray] | None = None,
+          cs_out: tuple[np.ndarray, np.ndarray] | None = None,
+          extent: Extent | None = None,
+          l_max: int = ids.L_MAX,
+          leaf_capacity: int = 64,
+          bloom_words: int = 8,
+          bloom_k: int = 3) -> SQuadTree:
+    """Build the S-QuadTree over spatial entities.
+
+    cs_in / cs_out are CSR pairs ``(offsets, cs_ids)`` aligned to
+    ``entity_keys`` giving incoming/outgoing characteristic sets per entity.
+    """
+    assert l_max <= ids.L_MAX
+    entity_keys = np.asarray(entity_keys, dtype=np.int64)
+    boxes_world = np.asarray(boxes_world, dtype=np.float64)
+    cs_self = np.asarray(cs_self, dtype=np.int64)
+    m = len(entity_keys)
+    if extent is None:
+        extent = Extent.of(boxes_world)
+    boxes = extent.normalize(boxes_world)
+
+    oid, zpath, level = _assign_ids(boxes, l_max)
+    order = np.argsort(oid, kind="stable")
+    oid, zpath, level = oid[order], zpath[order], level[order]
+    boxes, entity_keys, cs_self = boxes[order], entity_keys[order], cs_self[order]
+    inv = {int(k): int(i) for k, i in zip(entity_keys, oid)}
+
+    orig_row = order  # post-sort position -> original row
+
+    # ---- top-down materialization -------------------------------------
+    nodes: list[_BuildNode] = []
+    children_lists: list[list[int]] = []
+    node_index: dict[tuple[int, int], int] = {}
+
+    def subtree_slice(z: int, lvl: int) -> slice:
+        lo, hi = ids.subtree_interval(np.int64(z), np.int64(lvl))
+        return slice(int(np.searchsorted(oid, lo, "left")),
+                     int(np.searchsorted(oid, hi, "right")))
+
+    def own_slice(z: int, lvl: int) -> slice:
+        lo, hi = ids.node_own_interval(np.int64(z), np.int64(lvl))
+        return slice(int(np.searchsorted(oid, lo, "left")),
+                     int(np.searchsorted(oid, hi, "right")))
+
+    def cell_box(z: int, lvl: int) -> np.ndarray:
+        cx, cy = morton.deinterleave2(np.uint64(z))
+        size = 1.0 / (1 << lvl)
+        x0, y0 = float(cx) * size, float(cy) * size
+        return np.array([x0, y0, x0 + size, y0 + size])
+
+    stack = [(_BuildNode(0, 0, -1, np.empty(0, dtype=np.int64)))]
+    while stack:
+        bn = stack.pop()
+        my_idx = len(nodes)
+        nodes.append(bn)
+        children_lists.append([-1, -1, -1, -1])
+        node_index[(bn.z, bn.level)] = my_idx
+        if bn.parent >= 0:
+            quad = bn.z & 3
+            children_lists[bn.parent][quad] = my_idx
+        ss = subtree_slice(bn.z, bn.level)
+        n_sub = ss.stop - ss.start
+        osl = own_slice(bn.z, bn.level)
+        n_own = osl.stop - osl.start
+        if bn.level >= l_max or n_sub <= max(leaf_capacity, n_own):
+            continue  # leaf: everything below stays in this node's interval
+        # split: own (straddler) objects propagate into overlapping children
+        own_ids = oid[osl]
+        own_boxes = boxes[osl]
+        parent_elist_ids = bn.elist
+        if len(parent_elist_ids):
+            el_rows = np.searchsorted(oid, parent_elist_ids)
+            el_boxes = boxes[el_rows]
+            push_ids = np.concatenate([own_ids, parent_elist_ids])
+            push_boxes = np.concatenate([own_boxes, el_boxes], axis=0)
+        else:
+            push_ids, push_boxes = own_ids, own_boxes
+        for quad in range(4):
+            cz = (bn.z << 2) | quad
+            csl = subtree_slice(cz, bn.level + 1)
+            cbox = cell_box(cz, bn.level + 1)
+            if len(push_ids):
+                hit = geometry.boxes_intersect(push_boxes, cbox[None, :])
+                child_el = np.sort(push_ids[hit])
+            else:
+                child_el = np.empty(0, dtype=np.int64)
+            if (csl.stop - csl.start) == 0 and len(child_el) == 0:
+                continue  # empty quadrant: not materialized
+            stack.append(_BuildNode(cz, bn.level + 1, my_idx, child_el))
+
+    n = len(nodes)
+    node_z = np.array([b.z for b in nodes], dtype=np.int64)
+    node_level = np.array([b.level for b in nodes], dtype=np.int32)
+    node_parent = np.array([b.parent for b in nodes], dtype=np.int32)
+    node_children = np.array(children_lists, dtype=np.int32).reshape(n, 4)
+    node_cell = np.stack([cell_box(b.z, b.level) for b in nodes])
+    lo, hi = ids.subtree_interval(node_z, node_level.astype(np.int64))
+    irange = np.stack([lo, hi], axis=1)
+
+    # per-node intersecting objects = subtree slice + elist
+    elist_offsets = np.zeros(n + 1, dtype=np.int64)
+    elist_parts = []
+    node_mbr = np.zeros((n, 4))
+    n_subtree = np.zeros(n, dtype=np.int64)
+    bloom_self = BloomBank.empty(n, bloom_words, bloom_k)
+    bloom_in = BloomBank.empty(n, bloom_words, bloom_k)
+    bloom_out = BloomBank.empty(n, bloom_words, bloom_k)
+    stat_nodes, stat_cs = [], []
+
+    in_off, in_vals = (cs_in if cs_in is not None
+                       else (np.zeros(m + 1, dtype=np.int64), np.empty(0, np.int64)))
+    out_off, out_vals = (cs_out if cs_out is not None
+                         else (np.zeros(m + 1, dtype=np.int64), np.empty(0, np.int64)))
+    # map post-sort rows back to original rows for the CSR lookups
+    row_of_orig = np.empty(m, dtype=np.int64)
+    row_of_orig[order] = np.arange(m)
+
+    for i, bn in enumerate(nodes):
+        ss = subtree_slice(bn.z, bn.level)
+        n_subtree[i] = ss.stop - ss.start
+        elist_offsets[i + 1] = len(bn.elist)
+        elist_parts.append(bn.elist)
+        rows = np.arange(ss.start, ss.stop)
+        if len(bn.elist):
+            rows = np.concatenate([rows, np.searchsorted(oid, bn.elist)])
+        if len(rows) == 0:
+            node_mbr[i] = node_cell[i]
+            continue
+        clipped = geometry.clip_boxes(boxes[rows], node_cell[i])
+        node_mbr[i] = geometry.union_boxes(clipped)
+        cs_here = cs_self[rows]
+        bloom_self.add(np.full(len(rows), i), cs_here)
+        stat_nodes.append(np.full(len(rows), i, dtype=np.int64))
+        stat_cs.append(cs_here)
+        orig = orig_row[rows]
+        ins = np.concatenate([in_vals[in_off[r]:in_off[r + 1]] for r in orig]) \
+            if cs_in is not None else np.empty(0, np.int64)
+        outs = np.concatenate([out_vals[out_off[r]:out_off[r + 1]] for r in orig]) \
+            if cs_out is not None else np.empty(0, np.int64)
+        if len(ins):
+            bloom_in.add(np.full(len(ins), i), ins)
+        if len(outs):
+            bloom_out.add(np.full(len(outs), i), outs)
+
+    elist_offsets = np.cumsum(elist_offsets)
+    elist_ids = (np.concatenate(elist_parts) if elist_parts
+                 else np.empty(0, dtype=np.int64))
+    cs_stats = build_node_cs_stats(
+        np.concatenate(stat_nodes) if stat_nodes else np.empty(0, np.int64),
+        np.concatenate(stat_cs) if stat_cs else np.empty(0, np.int64), n)
+
+    return SQuadTree(
+        extent=extent, l_max=l_max,
+        node_z=node_z, node_level=node_level, node_parent=node_parent,
+        node_children=node_children, node_cell=node_cell, node_mbr=node_mbr,
+        irange=irange, n_subtree=n_subtree,
+        elist_offsets=elist_offsets, elist_ids=elist_ids,
+        bloom_self=bloom_self, bloom_in=bloom_in, bloom_out=bloom_out,
+        cs_stats=cs_stats,
+        obj_ids=oid, obj_mbr=boxes, obj_entity=entity_keys,
+        entity_to_id=inv,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Z-order cell-list radius join (GNN / molecular neighbor lists)
+# ----------------------------------------------------------------------------
+
+def radius_join(points_a: np.ndarray, points_b: np.ndarray, radius: float,
+                include_self: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """All pairs (i, j) with ||a_i - b_j|| <= radius, via Z-order cell lists.
+
+    This is the paper's distance join specialized to point sets; it is the
+    substrate for NequIP cutoff graphs and GraphCast grid<->mesh edges
+    (DESIGN.md §Arch-applicability). O(n) cells instead of O(n^2) pairs.
+    """
+    pa = np.asarray(points_a, dtype=np.float64)
+    pb = np.asarray(points_b, dtype=np.float64)
+    both = np.concatenate([pa, pb], axis=0)
+    ext = Extent.of(geometry.point_boxes(both))
+    na = ext.normalize(geometry.point_boxes(pa))[:, :2]
+    nb = ext.normalize(geometry.point_boxes(pb))[:, :2]
+    r_norm = radius / max(ext.width, ext.height)
+    level = int(np.clip(np.floor(-np.log2(max(r_norm, 1e-9))), 0, 16))
+    cell_b = morton.cell_of(nb, level)
+    nside = 1 << level
+    key_b = cell_b[:, 0] * nside + cell_b[:, 1]
+    order_b = np.argsort(key_b, kind="stable")
+    key_sorted = key_b[order_b]
+    cell_a = morton.cell_of(na, level)
+    out_i, out_j = [], []
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            cx = np.clip(cell_a[:, 0] + dx, 0, nside - 1)
+            cy = np.clip(cell_a[:, 1] + dy, 0, nside - 1)
+            keys = cx * nside + cy
+            lo = np.searchsorted(key_sorted, keys, "left")
+            hi = np.searchsorted(key_sorted, keys, "right")
+            cnt = hi - lo
+            if cnt.sum() == 0:
+                continue
+            ii = np.repeat(np.arange(len(pa)), cnt)
+            jj = order_b[np.concatenate([np.arange(a, b) for a, b in zip(lo, hi)])] \
+                if cnt.sum() else np.empty(0, np.int64)
+            d = np.sqrt(((pa[ii] - pb[jj]) ** 2).sum(axis=1))
+            keep = d <= radius
+            if not include_self and len(pa) == len(pb):
+                keep = keep & (ii != jj)
+            out_i.append(ii[keep])
+            out_j.append(jj[keep])
+    if not out_i:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    i = np.concatenate(out_i)
+    j = np.concatenate(out_j)
+    # dedupe (same pair can appear via clipped neighbor cells at the border)
+    key = i * np.int64(len(pb)) + j
+    _, uniq_idx = np.unique(key, return_index=True)
+    return i[uniq_idx], j[uniq_idx]

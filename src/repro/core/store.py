@@ -1,0 +1,343 @@
+"""Quad store with exhaustive permutation indexes + numeric block summaries.
+
+Follows RDF-3X / Quark-X (paper §3): quads ``(g, s, p, o)`` where ``g`` is the
+reification (fact) id, stored under multiple sort orders so that any bound
+prefix becomes a binary-search range scan. A per-predicate *numeric index*
+keeps facts sorted by the literal value with per-block min/max summaries —
+the substrate for top-k early termination and for the APS `x`-block estimate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import charsets, geometry
+from .dictionary import Dictionary
+from .squadtree import SQuadTree, build as build_tree
+
+# column order names -> tuple of column indices into (g, s, p, o)
+G, S, P, O = 0, 1, 2, 3
+ORDERS = {
+    "spog": (S, P, O, G), "posg": (P, O, S, G), "ospg": (O, S, P, G),
+    "psog": (P, S, O, G), "opsg": (O, P, S, G), "sopg": (S, O, P, G),
+    "gspo": (G, S, P, O), "pogs": (P, O, G, S),
+}
+DEFAULT_BLOCK = 1024
+
+
+@dataclasses.dataclass
+class NumericIndex:
+    """Facts of one predicate sorted by numeric object value (descending)."""
+
+    values: np.ndarray     # (m,) float64, sorted desc
+    subjects: np.ndarray   # (m,) int64
+    objects: np.ndarray    # (m,) int64 literal ids
+    facts: np.ndarray      # (m,) int64 (g column)
+    block: int
+    block_max: np.ndarray  # (nb,) upper bound per block (= first value)
+    block_min: np.ndarray  # (nb,) lower bound per block
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.block_max)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.values)
+
+    def get_block(self, b: int) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                         np.ndarray]:
+        sl = slice(b * self.block, min((b + 1) * self.block, len(self.values)))
+        return self.values[sl], self.subjects[sl], self.objects[sl], self.facts[sl]
+
+
+class DirectedNumericScan:
+    """Score-key-ordered block view of a NumericIndex.
+
+    key(v) = v for descending ranking, -v for ascending; block 0 always holds
+    the best keys so the top-k threshold logic is direction-agnostic.
+    """
+
+    def __init__(self, ni: NumericIndex, descending: bool):
+        self.ni = ni
+        self.descending = descending
+
+    @property
+    def n_blocks(self) -> int:
+        return self.ni.n_blocks
+
+    @property
+    def n_rows(self) -> int:
+        return self.ni.n_rows
+
+    def best_key(self, b: int) -> float:
+        if self.descending:
+            return float(self.ni.block_max[b])
+        return float(-self.ni.block_min[self.ni.n_blocks - 1 - b])
+
+    def global_best(self) -> float:
+        return self.best_key(0) if self.n_blocks else -np.inf
+
+    def global_worst(self) -> float:
+        if not self.n_blocks:
+            return -np.inf
+        last = self.n_blocks - 1
+        if self.descending:
+            return float(self.ni.block_min[last])
+        return float(-self.ni.block_max[0])
+
+    def get_block(self, b: int):
+        bb = b if self.descending else self.ni.n_blocks - 1 - b
+        v, s, o, f = self.ni.get_block(bb)
+        if not self.descending:
+            v, s, o, f = v[::-1], s[::-1], o[::-1], f[::-1]
+        return v, s, o, f
+
+    def blocks_needed(self, key_threshold: float) -> int:
+        """How many leading blocks can still contain keys > threshold --
+        the paper's estimate `x` of blocks fetched before early termination."""
+        if not np.isfinite(key_threshold):
+            return self.n_blocks
+        count = 0
+        for b in range(self.n_blocks):
+            if self.best_key(b) > key_threshold:
+                count += 1
+            else:
+                break
+        return count
+
+
+def _build_numeric_index(values, subjects, objects, facts, block: int
+                         ) -> NumericIndex:
+    order = np.argsort(-values, kind="stable")
+    v, s, o, f = values[order], subjects[order], objects[order], facts[order]
+    nb = (len(v) + block - 1) // block
+    bmax = np.array([v[i * block] for i in range(nb)]) if nb else np.empty(0)
+    bmin = np.array([v[min((i + 1) * block, len(v)) - 1] for i in range(nb)]) \
+        if nb else np.empty(0)
+    return NumericIndex(v, s, o, f, block, bmax, bmin)
+
+
+@dataclasses.dataclass
+class QuadStore:
+    quads: np.ndarray                   # (n, 4) int64 as (g, s, p, o)
+    dictionary: Dictionary
+    indexes: dict                       # order name -> sorted (n, 4) int64
+    numeric: dict                       # predicate id -> NumericIndex
+    tree: SQuadTree | None
+    cs_of_entity: dict                  # entity id -> CS id
+    cs_catalog: dict                    # cs id -> frozenset(predicate ids)
+    geometry_predicate: int = 0
+    exact_geoms: dict = dataclasses.field(default_factory=dict)
+    block: int = DEFAULT_BLOCK
+    # dense numeric-literal LUT for vectorized score lookups
+    _num_ids: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, dtype=np.int64))
+    _num_vals: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, dtype=np.float64))
+
+    def values_of(self, ids_arr: np.ndarray) -> np.ndarray:
+        """Vectorized literal-id -> float lookup (NaN for non-numeric)."""
+        ids_arr = np.asarray(ids_arr, dtype=np.int64)
+        out = np.full(len(ids_arr), np.nan)
+        if len(self._num_ids) == 0:
+            return out
+        pos = np.searchsorted(self._num_ids, ids_arr)
+        pos = np.clip(pos, 0, len(self._num_ids) - 1)
+        hit = self._num_ids[pos] == ids_arr
+        out[hit] = self._num_vals[pos[hit]]
+        return out
+
+    def exact_geometry(self, entity_ids: np.ndarray) -> list:
+        """Exact point-set geometry per entity (falls back to MBR corners)."""
+        out = []
+        t = self.tree
+        for e in np.asarray(entity_ids, dtype=np.int64):
+            pts = self.exact_geoms.get(int(e))
+            if pts is None:
+                pos = int(np.searchsorted(t.obj_ids, e))
+                if pos < len(t.obj_ids) and t.obj_ids[pos] == e:
+                    b = t.obj_mbr[pos]
+                    # denormalize corners back to world coordinates
+                    ext = t.extent
+                    pts = np.array([
+                        [b[0] * ext.width + ext.xmin, b[1] * ext.height + ext.ymin],
+                        [b[2] * ext.width + ext.xmin, b[3] * ext.height + ext.ymin],
+                    ])
+                else:
+                    pts = np.zeros((1, 2))
+            out.append(np.asarray(pts, dtype=np.float64))
+        return out
+
+    # ------------------------------------------------------------------
+    @property
+    def n_quads(self) -> int:
+        return len(self.quads)
+
+    def nbytes(self) -> int:
+        total = self.quads.nbytes
+        for idx in self.indexes.values():
+            total += idx.nbytes
+        for ni in self.numeric.values():
+            total += ni.values.nbytes + ni.subjects.nbytes + ni.facts.nbytes
+            total += ni.block_max.nbytes + ni.block_min.nbytes
+        if self.tree is not None:
+            total += self.tree.nbytes()
+        return total
+
+    # ------------------------------------------------------------------
+    def scan(self, g=None, s=None, p=None, o=None) -> np.ndarray:
+        """Range scan: returns matching rows as an (m, 4) (g,s,p,o) array."""
+        bound = {G: g, S: s, P: p, O: o}
+        consts = [c for c, v in bound.items() if v is not None]
+        best_name, best_prefix = "spog", 0
+        for name, cols in ORDERS.items():
+            k = 0
+            while k < 4 and cols[k] in consts:
+                k += 1
+            if k > best_prefix:
+                best_name, best_prefix = name, k
+        idx = self.indexes[best_name]
+        cols = ORDERS[best_name]
+        lo, hi = 0, len(idx)
+        for d in range(best_prefix):
+            c = cols[d]
+            v = bound[c]
+            col = idx[lo:hi, c]
+            lo, hi = lo + np.searchsorted(col, v, "left"), \
+                lo + np.searchsorted(col, v, "right")
+        rows = idx[lo:hi]
+        # residual filters for bound columns not covered by the sort prefix
+        prefix_cols = set(cols[:best_prefix])
+        for c in consts:
+            if c not in prefix_cols:
+                rows = rows[rows[:, c] == bound[c]]
+        return rows
+
+    def spatial_box_of(self, entity_ids: np.ndarray) -> np.ndarray:
+        """Normalized MBRs for spatial entity ids (NaN rows when unknown)."""
+        t = self.tree
+        out = np.full((len(entity_ids), 4), np.nan)
+        pos = np.searchsorted(t.obj_ids, entity_ids)
+        pos = np.clip(pos, 0, len(t.obj_ids) - 1)
+        hit = t.obj_ids[pos] == entity_ids
+        out[hit] = t.obj_mbr[pos[hit]]
+        return out
+
+
+def build_store(quads: np.ndarray,
+                dictionary: Dictionary,
+                geometry_predicate: int,
+                geometries: dict,
+                exact_geoms: dict | None = None,
+                block: int = DEFAULT_BLOCK,
+                l_max: int = 10,
+                leaf_capacity: int = 64,
+                extent: geometry.Extent | None = None) -> QuadStore:
+    """Assemble the full store.
+
+    quads: (n, 4) int64 (g, s, p, o) with PRE-spatial (plain) entity ids.
+    geometries: plain entity id -> (xmin, ymin, xmax, ymax) world box for
+        every subject that has a `geometry_predicate` fact.
+    exact_geoms: plain entity id -> (m, 2) exact point-set geometry.
+    """
+    quads = np.asarray(quads, dtype=np.int64)
+
+    # --- characteristic sets over all subjects --------------------------
+    subj, pred, obj = quads[:, S], quads[:, P], quads[:, O]
+    uniq_s, cs_ids = charsets.compute_characteristic_sets(subj, pred)
+    cs_of = dict(zip(uniq_s.tolist(), cs_ids.tolist()))
+    catalog = charsets.cs_catalog(subj, pred)
+
+    # --- S-QuadTree over spatial entities -------------------------------
+    tree = None
+    mapping: dict = {}
+    if geometries:
+        ent = np.array(sorted(geometries.keys()), dtype=np.int64)
+        boxes = np.array([geometries[int(e)] for e in ent], dtype=np.float64)
+        cs_self = np.array([cs_of.get(int(e), 0) for e in ent], dtype=np.int64)
+        # incoming CS: subjects s with (s, p, e); outgoing CS: objects o of (e, p, o)
+        in_lists, out_lists = [], []
+        obj_sorted_rows = quads[np.argsort(obj, kind="stable")]
+        subj_sorted_rows = quads[np.argsort(subj, kind="stable")]
+        os_col = obj_sorted_rows[:, O]
+        ss_col = subj_sorted_rows[:, S]
+        for e in ent:
+            a, b = np.searchsorted(os_col, e), np.searchsorted(os_col, e, "right")
+            incoming_subjects = obj_sorted_rows[a:b, S]
+            in_lists.append(np.unique(np.array(
+                [cs_of.get(int(x), 0) for x in incoming_subjects], dtype=np.int64)))
+            a, b = np.searchsorted(ss_col, e), np.searchsorted(ss_col, e, "right")
+            out_objects = subj_sorted_rows[a:b, O]
+            out_lists.append(np.unique(np.array(
+                [cs_of.get(int(x), 0) for x in out_objects], dtype=np.int64)))
+        def to_csr(lists):
+            off = np.zeros(len(lists) + 1, dtype=np.int64)
+            off[1:] = np.cumsum([len(x) for x in lists])
+            vals = (np.concatenate(lists) if len(lists) and off[-1]
+                    else np.empty(0, dtype=np.int64))
+            return off, vals
+        tree = build_tree(ent, boxes, cs_self,
+                          cs_in=to_csr(in_lists), cs_out=to_csr(out_lists),
+                          l_max=l_max, leaf_capacity=leaf_capacity,
+                          extent=extent)
+        mapping = dict(tree.entity_to_id)
+
+    # --- remap plain ids -> spatial ids everywhere ----------------------
+    if mapping:
+        lut_keys = np.array(list(mapping.keys()), dtype=np.int64)
+        lut_vals = np.array(list(mapping.values()), dtype=np.int64)
+        order = np.argsort(lut_keys)
+        lut_keys, lut_vals = lut_keys[order], lut_vals[order]
+
+        def remap_col(col):
+            pos = np.searchsorted(lut_keys, col)
+            pos = np.clip(pos, 0, len(lut_keys) - 1)
+            hit = lut_keys[pos] == col
+            out = col.copy()
+            out[hit] = lut_vals[pos[hit]]
+            return out
+
+        quads = quads.copy()
+        for c in (G, S, P, O):
+            quads[:, c] = remap_col(quads[:, c])
+        dictionary.remap(mapping)
+        cs_of = {mapping.get(k, k): v for k, v in cs_of.items()}
+
+    # --- permutation indexes --------------------------------------------
+    indexes = {}
+    for name, cols in ORDERS.items():
+        keys = tuple(quads[:, c] for c in reversed(cols))
+        indexes[name] = quads[np.lexsort(keys)]
+
+    # --- per-predicate numeric indexes -----------------------------------
+    numeric: dict = {}
+    numeric_ids = dictionary.numeric_value
+    num_ids_sorted = np.empty(0, dtype=np.int64)
+    num_vals_sorted = np.empty(0, dtype=np.float64)
+    if numeric_ids:
+        num_ids_sorted = np.fromiter(numeric_ids.keys(), np.int64)
+        order_n = np.argsort(num_ids_sorted)
+        num_ids_sorted = num_ids_sorted[order_n]
+        num_vals_sorted = np.fromiter(numeric_ids.values(), np.float64)[order_n]
+        is_num = np.isin(quads[:, O], num_ids_sorted)
+        nq = quads[is_num]
+        for p_id in np.unique(nq[:, P]):
+            rows = nq[nq[:, P] == p_id]
+            vals = np.array([numeric_ids[int(x)] for x in rows[:, O]])
+            numeric[int(p_id)] = _build_numeric_index(
+                vals, rows[:, S].copy(), rows[:, O].copy(), rows[:, G].copy(),
+                block)
+
+    # remap exact geometries to spatial ids
+    ex = {}
+    for k, v in (exact_geoms or {}).items():
+        ex[int(mapping.get(k, k))] = np.asarray(v, dtype=np.float64)
+
+    return QuadStore(quads=quads, dictionary=dictionary, indexes=indexes,
+                     numeric=numeric, tree=tree, cs_of_entity=cs_of,
+                     cs_catalog=catalog,
+                     geometry_predicate=int(geometry_predicate),
+                     exact_geoms=ex, block=block,
+                     _num_ids=num_ids_sorted, _num_vals=num_vals_sorted)

@@ -1,0 +1,66 @@
+"""Block-wise top-k accumulation with threshold early termination (§3.3).
+
+The TopK state is the piece both N-Plan and S-Plan share: because the heap and
+threshold θ survive across blocks and plans, switching plans at a
+materialization point costs nothing (the paper's "zero plan-switch cost").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .join import Relation
+
+NEG_INF = -np.inf
+
+
+@dataclasses.dataclass
+class TopK:
+    k: int
+    descending: bool = True
+    scores: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, dtype=np.float64))
+    rows: Relation = dataclasses.field(default_factory=Relation)
+
+    def _key(self, s: np.ndarray) -> np.ndarray:
+        return s if self.descending else -s
+
+    @property
+    def theta(self) -> float:
+        """Score of the k-th result so far; -inf until the heap is full.
+
+        (In ascending mode this is reported in *key space*: compare with
+        `key(score) > theta` to test if a candidate can still enter.)
+        """
+        if len(self.scores) < self.k:
+            return NEG_INF
+        return float(self._key(self.scores).min())
+
+    @property
+    def full(self) -> bool:
+        return len(self.scores) >= self.k
+
+    def push(self, scores: np.ndarray, rows: Relation) -> None:
+        if len(scores) == 0:
+            return
+        if self.rows.n == 0 and rows.n > 0:
+            self.rows = Relation({c: np.empty(0, dtype=v.dtype)
+                                  for c, v in rows.items()})
+        all_scores = np.concatenate([self.scores, scores])
+        all_rows = Relation({c: np.concatenate([self.rows[c], rows[c]])
+                             for c in rows})
+        order = np.argsort(-self._key(all_scores), kind="stable")[: self.k]
+        self.scores = all_scores[order]
+        self.rows = all_rows.take(order)
+
+    def results(self) -> tuple[np.ndarray, Relation]:
+        order = np.argsort(-self._key(self.scores), kind="stable")
+        return self.scores[order], self.rows.take(order)
+
+    def can_improve(self, upper_bound: float) -> bool:
+        """Could a candidate with this score bound still enter the top-k?"""
+        return (not self.full) or (self._keyf(upper_bound) > self.theta)
+
+    def _keyf(self, s: float) -> float:
+        return s if self.descending else -s

@@ -1,0 +1,70 @@
+"""RecSys data substrate: synthetic interaction sequences + embedding-bag.
+
+`InteractionStream` produces SASRec training triples (seq, pos, neg) from a
+latent-factor user/item model (so BPR loss is learnable). `embedding_bag` is
+the JAX EmbeddingBag (jnp.take + segment_sum) — built, not stubbed, per the
+assignment note that JAX has no native EmbeddingBag.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class InteractionStream:
+    def __init__(self, n_items: int, seq_len: int, batch: int,
+                 n_latent: int = 8, seed: int = 0,
+                 process_index: int = 0, process_count: int = 1):
+        assert batch % process_count == 0
+        self.n_items = n_items
+        self.seq_len = seq_len
+        self.local_batch = batch // process_count
+        self.seed = seed
+        self.process_index = process_index
+        rng = np.random.default_rng(seed)
+        # latent item factors drive coherent sequences
+        self.item_f = rng.normal(size=(n_items, n_latent)).astype(np.float32)
+
+    def batch(self, step: int):
+        rng = np.random.default_rng((self.seed, step, self.process_index))
+        b, s = self.local_batch, self.seq_len
+        user = rng.normal(size=(b, self.item_f.shape[1])).astype(np.float32)
+        # per-user item affinity -> top pool -> random walk over the pool
+        pool = 64
+        scores = user @ self.item_f.T
+        top = np.argpartition(-scores, pool, axis=1)[:, :pool]
+        idx = rng.integers(0, pool, size=(b, s + 1))
+        items = np.take_along_axis(top, idx, axis=1) + 1  # 0 = PAD
+        seq = items[:, :-1].astype(np.int32)
+        pos = items[:, 1:].astype(np.int32)
+        neg = rng.integers(1, self.n_items, size=(b, s)).astype(np.int32)
+        return seq, pos, neg
+
+
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
+                  offsets: jnp.ndarray, mode: str = "sum",
+                  weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """torch.nn.EmbeddingBag semantics on JAX primitives.
+
+    table (V, D); indices (nnz,) flat bag members; offsets (B,) bag starts.
+    Returns (B, D) reduced embeddings. mode: sum | mean | max.
+    """
+    nnz = indices.shape[0]
+    b = offsets.shape[0]
+    rows = jnp.take(table, indices, axis=0)                   # gather
+    if weights is not None:
+        rows = rows * weights[:, None]
+    # bag id per member: searchsorted over offsets
+    bag = jnp.searchsorted(offsets, jnp.arange(nnz), side="right") - 1
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, bag, num_segments=b)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, bag, num_segments=b)
+        c = jax.ops.segment_sum(jnp.ones((nnz, 1), rows.dtype), bag,
+                                num_segments=b)
+        return s / jnp.maximum(c, 1.0)
+    if mode == "max":
+        return jax.ops.segment_max(rows, bag, num_segments=b)
+    raise ValueError(mode)

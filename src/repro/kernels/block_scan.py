@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: blocked top-k summary scan (threshold machinery).
+
+One HBM pass over score blocks producing, per block: the block maximum (the
+upper bound the APS cost model and early termination compare against theta),
+the survivor count, and the survivor mask. Fusing the three avoids three
+separate elementwise passes over the candidate scores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scores_ref, theta_ref, max_ref, cnt_ref, mask_ref):
+    s = scores_ref[...]                        # (1, B)
+    theta = theta_ref[0, 0]
+    m = s > theta
+    max_ref[...] = jnp.max(s, axis=1, keepdims=True)
+    cnt_ref[...] = jnp.sum(m.astype(jnp.int32), axis=1, keepdims=True)
+    mask_ref[...] = m.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_scan(scores: jnp.ndarray, theta: float,
+               interpret: bool = False):
+    """scores (nb, B) float32 -> (block_max (nb,), count (nb,), mask (nb,B))."""
+    nb, bsz = scores.shape
+    theta_arr = jnp.full((1, 1), theta, dtype=jnp.float32)
+    bmax, cnt, mask = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, bsz), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, bsz), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nb, bsz), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(scores.astype(jnp.float32), theta_arr)
+    return bmax[:, 0], cnt[:, 0], mask

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: GQA flash attention (forward).
+
+Online-softmax tiling [FlashAttention, arXiv:2205.14135] adapted to the TPU
+memory hierarchy: Q/K/V tiles staged HBM->VMEM by BlockSpec, the (bq, bk)
+logit tile lives only in VMEM/VREGs, and the running (m, l, acc) state sits
+in VMEM scratch carried across the kv grid dimension (TPU grids iterate the
+trailing axis innermost, so `nk` is the reduction axis). GQA is expressed in
+the K/V index_map: kv_head = q_head // group, so no K/V repeat is ever
+materialized. MXU-aligned tiles: bq, bk multiples of 128 where shapes allow.
+
+Training uses XLA's fused attention (this kernel is forward-only); the serve
+path and prefill use this kernel on real TPUs. Validation: interpret=True
+against ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, causal: bool, bq: int, bk: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qi = pl.program_id(1)
+    run = True
+    if causal:
+        # skip fully-masked tiles (query block strictly above diagonal)
+        run = (ki * bk) <= (qi * bq + bq - 1)
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                          # (bq, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (B, Hq, S, D); k, v (B, Hkv, S, D); Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = d ** -0.5
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, "seq must divide block sizes"
+    nq, nk = s // bq, s // bk
+    qf = q.reshape(b * hq, s, d)
+    grid = (b * hq, nq, nk)
+
+    def q_map(h, i, j):
+        return (h, i, 0)
+
+    def kv_map(h, i, j):
+        batch = h // hq
+        kvh = (h % hq) // g
+        return (batch * hkv + kvh, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, k.reshape(b * hkv, s, d), v.reshape(b * hkv, s, d))
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: Z-order (Morton) bit interleave.
+
+Identifier assignment and query-side cell bucketing encode 16-bit cell
+coordinates into Morton codes. Pure VPU bit manipulation over (R, 128)
+lane-aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spread(v):
+    v = v.astype(jnp.uint32) & jnp.uint32(0xFFFF)
+    v = (v | (v << 8)) & jnp.uint32(0x00FF00FF)
+    v = (v | (v << 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v | (v << 2)) & jnp.uint32(0x33333333)
+    v = (v | (v << 1)) & jnp.uint32(0x55555555)
+    return v
+
+
+def _kernel(cx_ref, cy_ref, out_ref):
+    out_ref[...] = (_spread(cx_ref[...])
+                    | (_spread(cy_ref[...]) << 1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def morton_encode(cx: jnp.ndarray, cy: jnp.ndarray, rows: int = 8,
+                  interpret: bool = False) -> jnp.ndarray:
+    """cx, cy int32 cell coords (n,) -> morton codes int32 (n,)."""
+    n = cx.shape[0]
+    lane = 128
+    tile = rows * lane
+    npad = -(-n // tile) * tile
+    cx_p = jnp.pad(cx.astype(jnp.int32), (0, npad - n)).reshape(-1, lane)
+    cy_p = jnp.pad(cy.astype(jnp.int32), (0, npad - n)).reshape(-1, lane)
+    grid = (cx_p.shape[0] // rows,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, lane), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, lane), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(cx_p.shape, jnp.int32),
+        interpret=interpret,
+    )(cx_p, cy_p)
+    return out.reshape(-1)[:n]

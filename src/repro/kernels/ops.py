@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the Pallas kernels with CPU fallbacks.
+
+On TPU the Pallas path compiles natively; on CPU we use interpret mode (for
+tests) or the jnp reference (for the engine's `kernel` backend), keeping one
+call site for both worlds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import block_scan as _bs
+from . import bloom_probe as _bp
+from . import distance_join as _dj
+from . import flash_attention as _fa
+from . import morton_kernel as _mk
+from . import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def distance_join_matrix(driver, driven, interpret: bool | None = None):
+    driver = jnp.asarray(driver, dtype=jnp.float32)
+    driven = jnp.asarray(driven, dtype=jnp.float32)
+    if _on_tpu() or interpret:
+        return _dj.distance_join(driver, driven,
+                                 interpret=bool(interpret) and not _on_tpu())
+    return ref.distance_join_ref(driver, driven)
+
+
+def distance_join_mask(driver, driven, dist: float,
+                       interpret: bool | None = None):
+    return distance_join_matrix(driver, driven, interpret) <= dist
+
+
+def bloom_probe(bits, keys, k: int = 3, interpret: bool | None = None):
+    """bits (B, W) uint32 pre-gathered filter rows; keys (B,) int64."""
+    keys = np.asarray(keys, dtype=np.int64).view(np.uint64)
+    lo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+                     .view(np.int32))
+    hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32).view(np.int32))
+    bits = jnp.asarray(bits)
+    if _on_tpu() or interpret:
+        return _bp.bloom_probe(bits, lo, hi, k=k,
+                               interpret=bool(interpret) and not _on_tpu()) == 1
+    return ref.bloom_probe_ref(bits, lo, hi, k)
+
+
+def block_scan(scores, theta: float, interpret: bool | None = None):
+    scores = jnp.asarray(scores, dtype=jnp.float32)
+    if _on_tpu() or interpret:
+        return _bs.block_scan(scores, theta,
+                              interpret=bool(interpret) and not _on_tpu())
+    return ref.block_scan_ref(scores, theta)
+
+
+def morton_encode(cx, cy, interpret: bool | None = None):
+    cx = jnp.asarray(cx, dtype=jnp.int32)
+    cy = jnp.asarray(cy, dtype=jnp.int32)
+    if _on_tpu() or interpret:
+        return _mk.morton_encode(cx, cy,
+                                 interpret=bool(interpret) and not _on_tpu())
+    return ref.morton_ref(cx, cy)
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    interpret: bool | None = None):
+    if _on_tpu() or interpret:
+        return _fa.flash_attention(q, k, v, causal=causal,
+                                   interpret=bool(interpret) and not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal)

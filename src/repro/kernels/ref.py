@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each `*_ref` is the semantic specification; kernel tests sweep shapes/dtypes
+and assert_allclose kernels (interpret=True on CPU) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------- distance join --
+def distance_join_ref(driver: jnp.ndarray, driven: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise min distance between boxes. driver (M,4), driven (N,4) ->
+    (M, N) float32 (0 where boxes intersect)."""
+    a = driver[:, None, :]
+    b = driven[None, :, :]
+    dx = jnp.maximum(0.0, jnp.maximum(a[..., 0] - b[..., 2],
+                                      b[..., 0] - a[..., 2]))
+    dy = jnp.maximum(0.0, jnp.maximum(a[..., 1] - b[..., 3],
+                                      b[..., 1] - a[..., 3]))
+    return jnp.sqrt(dx * dx + dy * dy).astype(jnp.float32)
+
+
+# -------------------------------------------------------------- bloom probe --
+def _mix32_jnp(x, seed: int):
+    x = (x + jnp.uint32(0x9E3779B9) * jnp.uint32(seed + 1)).astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = (x * jnp.uint32(0x85EBCA6B)).astype(jnp.uint32)
+    x = x ^ (x >> 13)
+    x = (x * jnp.uint32(0xC2B2AE35)).astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash32_jnp(lo: jnp.ndarray, hi: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Matches repro.core.charsets.hash32 given the key's (lo32, hi32)."""
+    return _mix32_jnp(lo.astype(jnp.uint32) ^ _mix32_jnp(hi.astype(jnp.uint32),
+                                                         seed + 7), seed)
+
+
+def bloom_probe_ref(bits: jnp.ndarray, key_lo: jnp.ndarray,
+                    key_hi: jnp.ndarray, k: int) -> jnp.ndarray:
+    """bits (B, W) uint32 (pre-gathered filter rows), keys split into 32-bit
+    halves. Returns (B,) bool: all k probe bits set."""
+    nbits = bits.shape[1] * 32
+    h1 = hash32_jnp(key_lo, key_hi, 0)
+    h2 = hash32_jnp(key_lo, key_hi, 1) | jnp.uint32(1)
+    hit = jnp.ones(bits.shape[0], dtype=bool)
+    for i in range(k):
+        pos = (h1 + jnp.uint32(i) * h2) % jnp.uint32(nbits)
+        w = (pos // 32).astype(jnp.int32)
+        bshift = (pos % 32).astype(jnp.uint32)
+        # one-hot word select (kernel does the same trick: no in-row gather)
+        sel = jnp.sum(
+            bits * (jax.lax.broadcasted_iota(jnp.int32, bits.shape, 1)
+                    == w[:, None]).astype(jnp.uint32), axis=1)
+        hit &= ((sel >> bshift) & jnp.uint32(1)) == 1
+    return hit
+
+
+# ---------------------------------------------------------------- block scan --
+def block_scan_ref(scores: jnp.ndarray, theta: float
+                   ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Blocked top-k summary pass. scores (nb, B) float32.
+
+    Returns (block_max (nb,), survivor_count (nb,), mask (nb, B) uint8) where
+    survivors are entries with score > theta.
+    """
+    mask = scores > theta
+    return (scores.max(axis=1),
+            mask.sum(axis=1).astype(jnp.int32),
+            mask.astype(jnp.uint8))
+
+
+# ------------------------------------------------------------------- morton --
+def morton_ref(cx: jnp.ndarray, cy: jnp.ndarray) -> jnp.ndarray:
+    """Interleave 16-bit cell coords -> int32 Morton code. Any shape."""
+    def spread(v):
+        v = v.astype(jnp.uint32) & jnp.uint32(0xFFFF)
+        v = (v | (v << 8)) & jnp.uint32(0x00FF00FF)
+        v = (v | (v << 4)) & jnp.uint32(0x0F0F0F0F)
+        v = (v | (v << 2)) & jnp.uint32(0x33333333)
+        v = (v | (v << 1)) & jnp.uint32(0x55555555)
+        return v
+    return (spread(cx) | (spread(cy) << 1)).astype(jnp.int32)
+
+
+# --------------------------------------------------------- flash attention --
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, scale: float | None = None
+                        ) -> jnp.ndarray:
+    """GQA attention oracle. q (B, Hq, S, D); k, v (B, Hkv, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vv.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,414 @@
+"""Cell builder: (arch, shape, mesh) -> (step_fn, sharded abstract inputs).
+
+Every one of the 40 assigned (architecture x input-shape) cells is realized
+here as a jittable step function plus ShapeDtypeStruct inputs carrying
+NamedShardings (weak-type-correct, shardable, zero allocation). The dry-run
+lowers + compiles each cell; training/serving drivers reuse the same
+builders with real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import registry
+from ..dist import partitioning as pt
+from ..models import equivariant, gnn, graphcast, moe, sasrec, transformer
+from ..serve import retrieval
+from ..train import optim
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: object                # jittable
+    args: tuple               # ShapeDtypeStructs with shardings
+    out_shardings: object = None
+    donate: tuple = ()        # arg indices donated (in-place aliasing)
+    static: dict = dataclasses.field(default_factory=dict)
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _shard_tree(abstract_tree, sharding_tree):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract_tree, sharding_tree)
+
+
+def _opt_sharding_like(param_sharding, mesh, abstract_params=None,
+                       zero1: bool = True):
+    rep = NamedSharding(mesh, P())
+    if zero1 and abstract_params is not None:
+        moments = pt.zero1_sharding(param_sharding, abstract_params, mesh)
+    else:
+        moments = param_sharding
+    return {"m": moments, "v": moments, "step": rep}
+
+
+def _abstract_params(init_fn, cfg):
+    return jax.eval_shape(functools.partial(init_fn, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# LM / MoE cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch, shape_name, spec, mesh, mod, cfg,
+             variant: str = "base") -> Cell:
+    is_moe = registry.get(arch).FAMILY == "moe"
+    model_mod = moe if is_moe else transformer
+    loss_fn = model_mod.lm_loss
+    dp = pt.dp_axes(mesh)
+    rep = NamedSharding(mesh, P())
+
+    p_abs = _abstract_params(model_mod.init_params, cfg)
+    p_shard = pt.lm_param_sharding(p_abs, mesh)
+    params_in = _shard_tree(p_abs, p_shard)
+
+    if spec["kind"] == "train":
+        if variant == "base":
+            # sequence-parallel residual stream (SP): the remat-saved
+            # per-layer carry shards 16-way over "model"
+            cfg = dataclasses.replace(cfg, batch_axes=dp, seq_axes=("model",))
+            n_micro = 1
+        elif variant == "opt":
+            # iter 1: gradient-accumulation microbatching — small carries
+            # without SP's per-layer activation all-gathers (TP all-reduces
+            # replace them; see EXPERIMENTS.md §Perf)
+            cfg = dataclasses.replace(cfg, batch_axes=dp, seq_axes=())
+            n_micro = 4
+        else:  # "opt2": SP + microbatching — small carries AND single
+            #   grad sync; TP activation comms stay (inherent at TP=16)
+            cfg = dataclasses.replace(cfg, batch_axes=dp, seq_axes=("model",))
+            n_micro = 4
+        o_abs = jax.eval_shape(optim.init_state, p_abs)
+        o_shard = _opt_sharding_like(p_shard, mesh, p_abs)
+        opt_in = _shard_tree(o_abs, o_shard)
+        tokens = _sds((spec["global_batch"], spec["seq_len"] + 1), jnp.int32,
+                      NamedSharding(mesh, P(dp, None)))
+        ocfg = optim.AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+            else:
+                gb = batch.shape[0]
+                mb = batch.reshape(n_micro, gb // n_micro, -1)
+
+                def micro(gsum, tokens_):
+                    l, g = jax.value_and_grad(loss_fn)(params, tokens_, cfg)
+                    gsum = jax.tree.map(
+                        lambda a, b2: a + b2.astype(jnp.float32), gsum, g)
+                    return gsum, l
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                gsum, losses = jax.lax.scan(micro, zeros, mb)
+                grads = jax.tree.map(lambda g: g / n_micro, gsum)
+                loss = jnp.mean(losses)
+            params, opt_state, metrics = optim.apply_updates(
+                params, grads, opt_state, ocfg)
+            return params, opt_state, loss, metrics
+
+        return Cell(arch, shape_name, train_step,
+                    (params_in, opt_in, tokens),
+                    out_shardings=(p_shard, o_shard, rep, None),
+                    donate=(0, 1))
+
+    if spec["kind"] == "prefill":
+        cfg2 = dataclasses.replace(cfg, attn_chunk=2048, remat=True)
+        if variant == "opt":
+            cfg2 = dataclasses.replace(cfg2, attn_bf16_operands=True)
+        tokens = _sds((spec["global_batch"], spec["seq_len"]), jnp.int32,
+                      NamedSharding(mesh, P(dp, None)))
+        cache_shard = pt.kv_cache_sharding(mesh)
+
+        def prefill(params, batch):
+            return model_mod.forward_with_cache(params, batch, cfg2)
+
+        return Cell(arch, shape_name, prefill, (params_in, tokens),
+                    out_shardings=(None, {"k": cache_shard, "v": cache_shard}))
+
+    # decode kinds -----------------------------------------------------
+    if variant == "opt":
+        # bf16 cache reads with f32 MXU accumulation + scatter cache update
+        cfg = dataclasses.replace(cfg, attn_bf16_operands=True,
+                                  scatter_cache_update=True)
+    b, s = spec["global_batch"], spec["seq_len"]
+    if b == 1:  # long-context: batch unshardable, spread seq over everything
+        cache_spec = NamedSharding(mesh, P(None, None, dp + ("model",),
+                                           None, None))
+        tok_spec = NamedSharding(mesh, P(None))
+    else:
+        cache_spec = pt.kv_cache_sharding(mesh)
+        tok_spec = NamedSharding(mesh, P(dp))
+    cache_abs = jax.eval_shape(
+        lambda: model_mod.init_cache(cfg, b, s))
+    cache_in = jax.tree.map(
+        lambda a: _sds(a.shape, a.dtype, cache_spec), cache_abs)
+    tokens = _sds((b,), jnp.int32, tok_spec)
+    pos = _sds((b,), jnp.int32, tok_spec)
+
+    def serve_step(params, cache, tok, pos):
+        return model_mod.decode_step(params, cache, tok, pos, cfg)
+
+    return Cell(arch, shape_name, serve_step,
+                (params_in, cache_in, tokens, pos),
+                out_shardings=(None, {"k": cache_spec, "v": cache_spec}),
+                donate=(1,) if variant == "opt" else ())
+
+
+# ---------------------------------------------------------------------------
+# GNN cells (gcn / sage)
+# ---------------------------------------------------------------------------
+
+def _dp_size(mesh) -> int:
+    return int(np_prod([mesh.shape[a] for a in pt.dp_axes(mesh)]))
+
+
+def np_prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _gnn_sizes(spec, mesh) -> tuple[int, int]:
+    """Node/edge counts padded to the data-axis size (loaders zero-pad;
+    loss masks exclude padding)."""
+    if spec["kind"] == "sampled":
+        b = spec["batch_nodes"]
+        f1, f2 = spec["fanout"]
+        nodes = b * (1 + f1 + f1 * f2)
+        edges = b * f1 + b * f1 * f2
+    elif spec["kind"] == "batched":
+        nodes = spec["n_nodes"] * spec["batch"]
+        edges = spec["n_edges"] * spec["batch"]
+    else:
+        nodes, edges = spec["n_nodes"], spec["n_edges"]
+    m = _dp_size(mesh)
+    return _pad_to(nodes, m), _pad_to(edges, m)
+
+
+def _gnn_cell(arch, shape_name, spec, mesh, cfg) -> Cell:
+    n, e = _gnn_sizes(spec, mesh)
+    cfg = dataclasses.replace(cfg, d_in=spec["d_feat"],
+                              d_out=max(spec["n_classes"], 2))
+    dp = pt.dp_axes(mesh)
+    rep = NamedSharding(mesh, P())
+    p_abs = _abstract_params(gnn.init_params, cfg)
+    p_shard = pt.gnn_param_sharding(p_abs, mesh)
+    params_in = _shard_tree(p_abs, p_shard)
+    o_abs = jax.eval_shape(optim.init_state, p_abs)
+    o_shard = _opt_sharding_like(p_shard, mesh, p_abs)
+    opt_in = _shard_tree(o_abs, o_shard)
+    x = _sds((n, spec["d_feat"]), jnp.float32, NamedSharding(mesh, P(dp, None)))
+    edges = _sds((2, e), jnp.int32, NamedSharding(mesh, P(None, dp)))
+    labels = _sds((n,), jnp.int32, NamedSharding(mesh, P(dp)))
+    mask = _sds((n,), jnp.bool_, NamedSharding(mesh, P(dp)))
+    ocfg = optim.AdamWConfig()
+
+    def train_step(params, opt_state, x, edges, labels, mask):
+        loss, grads = jax.value_and_grad(gnn.nll_loss)(
+            params, x, edges, labels, mask, cfg)
+        params, opt_state, metrics = optim.apply_updates(
+            params, grads, opt_state, ocfg)
+        return params, opt_state, loss, metrics
+
+    return Cell(arch, shape_name, train_step,
+                (params_in, opt_in, x, edges, labels, mask),
+                out_shardings=(p_shard, o_shard, rep, None))
+
+
+# ---------------------------------------------------------------------------
+# GraphCast cells
+# ---------------------------------------------------------------------------
+
+def _graphcast_cell(arch, shape_name, spec, mesh, cfg) -> Cell:
+    n, e = _gnn_sizes(spec, mesh)
+    n_mesh = max(n // 4, 16)
+    n_bip = 4 * n
+    dp = pt.dp_axes(mesh)
+    rep = NamedSharding(mesh, P())
+    p_abs = _abstract_params(graphcast.init_params, cfg)
+    p_shard = pt.graphcast_param_sharding(p_abs, mesh)
+    params_in = _shard_tree(p_abs, p_shard)
+    o_abs = jax.eval_shape(optim.init_state, p_abs)
+    o_shard = _opt_sharding_like(p_shard, mesh, p_abs)
+    opt_in = _shard_tree(o_abs, o_shard)
+    edge_spec = NamedSharding(mesh, P(None, dp))
+    gx = _sds((n, cfg.n_vars), jnp.float32, NamedSharding(mesh, P(dp, None)))
+    g2m = _sds((2, n_bip), jnp.int32, edge_spec)
+    me = _sds((2, e), jnp.int32, edge_spec)
+    m2g = _sds((2, n_bip), jnp.int32, edge_spec)
+    target = _sds((n, cfg.n_vars), jnp.float32,
+                  NamedSharding(mesh, P(dp, None)))
+    ocfg = optim.AdamWConfig()
+
+    def train_step(params, opt_state, gx, g2m, me, m2g, target):
+        def loss_fn(p):
+            return graphcast.mse_loss(p, gx, target, g2m, me, m2g, n_mesh, cfg)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = optim.apply_updates(
+            params, grads, opt_state, ocfg)
+        return params, opt_state, loss, metrics
+
+    return Cell(arch, shape_name, train_step,
+                (params_in, opt_in, gx, g2m, me, m2g, target),
+                out_shardings=(p_shard, o_shard, rep, None))
+
+
+# ---------------------------------------------------------------------------
+# NequIP cells
+# ---------------------------------------------------------------------------
+
+def _nequip_cell(arch, shape_name, spec, mesh, cfg) -> Cell:
+    n, e = _gnn_sizes(spec, mesh)
+    n_graphs = spec.get("batch", 1)
+    dp = pt.dp_axes(mesh)
+    rep = NamedSharding(mesh, P())
+    p_abs = _abstract_params(equivariant.init_params, cfg)
+    p_shard = jax.tree.map(lambda _: rep, p_abs)  # tiny weights: replicate
+    params_in = _shard_tree(p_abs, p_shard)
+    o_abs = jax.eval_shape(optim.init_state, p_abs)
+    o_shard = _opt_sharding_like(p_shard, mesh, p_abs)
+    opt_in = _shard_tree(o_abs, o_shard)
+    species = _sds((n,), jnp.int32, NamedSharding(mesh, P(dp)))
+    positions = _sds((n, 3), jnp.float32, NamedSharding(mesh, P(dp, None)))
+    edges = _sds((2, e), jnp.int32, NamedSharding(mesh, P(None, dp)))
+    gid = _sds((n,), jnp.int32, NamedSharding(mesh, P(dp)))
+    targets = _sds((n_graphs,), jnp.float32, NamedSharding(mesh, P(None)))
+    ocfg = optim.AdamWConfig()
+
+    def train_step(params, opt_state, species, positions, edges, gid, targets):
+        def loss_fn(p):
+            return equivariant.batched_energy_loss(
+                p, species, positions, edges, gid, targets, cfg)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = optim.apply_updates(
+            params, grads, opt_state, ocfg)
+        return params, opt_state, loss, metrics
+
+    return Cell(arch, shape_name, train_step,
+                (params_in, opt_in, species, positions, edges, gid, targets),
+                out_shardings=(p_shard, o_shard, rep, None))
+
+
+# ---------------------------------------------------------------------------
+# SASRec cells
+# ---------------------------------------------------------------------------
+
+def _sasrec_cell(arch, shape_name, spec, mesh, cfg,
+                 variant: str = "base") -> Cell:
+    dp = pt.dp_axes(mesh)
+    rep = NamedSharding(mesh, P())
+    p_abs = _abstract_params(sasrec.init_params, cfg)
+    p_shard = pt.sasrec_param_sharding(p_abs, mesh)
+    params_in = _shard_tree(p_abs, p_shard)
+
+    if spec["kind"] == "train":
+        o_abs = jax.eval_shape(optim.init_state, p_abs)
+        o_shard = _opt_sharding_like(p_shard, mesh, p_abs)
+        opt_in = _shard_tree(o_abs, o_shard)
+        bshape = (spec["batch"], cfg.seq_len)
+        bspec = NamedSharding(mesh, P(dp, None))
+        seq = _sds(bshape, jnp.int32, bspec)
+        pos_i = _sds(bshape, jnp.int32, bspec)
+        neg_i = _sds(bshape, jnp.int32, bspec)
+        ocfg = optim.AdamWConfig()
+
+        def train_step(params, opt_state, seq, pos_i, neg_i):
+            loss, grads = jax.value_and_grad(sasrec.bpr_loss)(
+                params, seq, pos_i, neg_i, cfg)
+            params, opt_state, metrics = optim.apply_updates(
+                params, grads, opt_state, ocfg)
+            return params, opt_state, loss, metrics
+
+        return Cell(arch, shape_name, train_step,
+                    (params_in, opt_in, seq, pos_i, neg_i),
+                    out_shardings=(p_shard, o_shard, rep, None))
+
+    if spec["kind"] in ("serve", "bulk"):
+        b = spec["batch"]
+        seq = _sds((b, cfg.seq_len), jnp.int32, NamedSharding(mesh, P(dp, None)))
+        user_chunk = 512 if spec["kind"] == "bulk" else b
+
+        def serve_step(params, seq):
+            state = sasrec.user_state(params, seq, cfg)
+            if variant == "opt":
+                # catalog stays sharded: shard-local scans + k-wide merge
+                scorer = lambda st: retrieval.blocked_topk_sharded(
+                    st, params["item_embed"], mesh=mesh, axis="model",
+                    k=100, block=131072)
+            else:
+                scorer = lambda st: retrieval.blocked_topk(
+                    st, params["item_embed"], k=100, block=131072)
+            if user_chunk < b:
+                states = state.reshape(b // user_chunk, user_chunk, -1)
+                return jax.lax.map(scorer, states)
+            return scorer(state)
+
+        return Cell(arch, shape_name, serve_step, (params_in, seq))
+
+    # retrieval_cand: 1 query x 1M candidates through STREAK early-out top-k
+    n_items = cfg.n_items
+    block = 65536
+    nb = -(-n_items // block)
+    seq = _sds((spec["batch"], cfg.seq_len), jnp.int32,
+               NamedSharding(mesh, P(None, None)))
+    items_sorted = _sds((n_items, cfg.embed_dim), jnp.float32,
+                        NamedSharding(mesh, P("model", None)))
+    item_order = _sds((n_items,), jnp.int32, NamedSharding(mesh, P("model")))
+    if variant == "opt":
+        # shard-local early-out scans + one k-wide merge (no per-block
+        # all-gather of the catalog); bounds sharded with their blocks
+        bounds = _sds((nb,), jnp.float32, NamedSharding(mesh, P("model")))
+
+        def retrieval_step(params, seq, items_sorted, item_order, bounds):
+            state = sasrec.user_state(params, seq, cfg)
+            return retrieval.streak_topk_sharded(
+                state, items_sorted, item_order, bounds, mesh=mesh,
+                axis="model", k=100, block=block)
+    else:
+        bounds = _sds((nb,), jnp.float32, rep)
+
+        def retrieval_step(params, seq, items_sorted, item_order, bounds):
+            state = sasrec.user_state(params, seq, cfg)
+            return retrieval.streak_topk(state, items_sorted, item_order,
+                                         bounds, k=100, block=block)
+
+    return Cell(arch, shape_name, retrieval_step,
+                (params_in, seq, items_sorted, item_order, bounds))
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh,
+               variant: str = "base") -> Cell:
+    mod = registry.get(arch)
+    spec = mod.SHAPES[shape_name]
+    cfg = mod.CONFIG
+    fam = mod.FAMILY
+    if fam in ("lm", "moe"):
+        return _lm_cell(arch, shape_name, spec, mesh, mod, cfg, variant)
+    if fam == "gnn":
+        return _gnn_cell(arch, shape_name, spec, mesh, cfg)
+    if fam == "graphcast":
+        return _graphcast_cell(arch, shape_name, spec, mesh, cfg)
+    if fam == "nequip":
+        return _nequip_cell(arch, shape_name, spec, mesh, cfg)
+    if fam == "recsys":
+        return _sasrec_cell(arch, shape_name, spec, mesh, cfg, variant)
+    raise ValueError(fam)

@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) cell on the single-pod
+(16, 16) mesh and the 2-pod (2, 16, 16) mesh using 512 placeholder host
+devices, prints memory_analysis / cost_analysis, extracts per-collective
+byte counts from the optimized HLO, and dumps one JSON per cell into
+artifacts/dryrun/ for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from ..configs import registry
+from ..roofline import hlo_parse
+from .cells import build_cell
+from .mesh import make_production_mesh
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             verbose: bool = True, variant: str = "base") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, variant=variant)
+    with mesh:
+        kw = {}
+        if cell.out_shardings is not None:
+            kw["out_shardings"] = cell.out_shardings
+        if cell.donate and variant != "base":
+            kw["donate_argnums"] = cell.donate
+        jitted = jax.jit(cell.fn, **kw)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+    colls = hlo_parse.collective_bytes(text)
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "compile_s": round(time.time() - t0, 1),
+        # memory_analysis is per-device
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "out_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        # cost_analysis is per-device BUT counts while bodies once; the
+        # loop-weighted hlo_parse numbers below are the roofline inputs
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        "dot_flops_per_device": hlo_parse.dot_flops(text),
+        "hbm_bytes_per_device": hlo_parse.hbm_bytes(text),
+        "collectives": colls,
+    }
+    if verbose:
+        peak = rec["arg_bytes"] + rec["temp_bytes"] + rec["out_bytes"]
+        print(f"[{arch} x {shape} x {rec['mesh']}] compiled in "
+              f"{rec['compile_s']}s; per-device: args "
+              f"{rec['arg_bytes']/2**30:.2f} GiB, temps "
+              f"{rec['temp_bytes']/2**30:.2f} GiB, peak ~{peak/2**30:.2f} GiB;"
+              f" flops {rec['flops_per_device']:.3e}; collective bytes "
+              f"{sum(c['bytes'] for c in colls.values()):.3e}")
+    ART.mkdir(parents=True, exist_ok=True)
+    suffix = "" if variant == "base" else f"__{variant}"
+    out = ART / f"{arch}__{shape}__{rec['mesh']}{suffix}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="both")
+    ap.add_argument("--variant", default="base", choices=["base", "opt", "opt2"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = registry.all_cells() if args.all else None
+    if cells is None:
+        archs = [args.arch] if args.arch else list(registry.ARCHS)
+        cells = []
+        for a in archs:
+            shapes = [args.shape] if args.shape else list(registry.get(a).SHAPES)
+            cells += [(a, s) for s in shapes]
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    failures = []
+    suffix = "" if args.variant == "base" else f"__{args.variant}"
+    for arch, shape in cells:
+        for mp in pods:
+            name = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}{suffix}"
+            if args.skip_existing and (ART / f"{name}.json").exists():
+                print(f"[skip] {name}")
+                continue
+            try:
+                run_cell(arch, shape, mp, variant=args.variant)
+            except Exception:
+                failures.append(name)
+                print(f"[FAIL] {name}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

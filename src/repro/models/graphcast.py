@@ -1,0 +1,130 @@
+"""GraphCast-style encoder-processor-decoder mesh GNN [arXiv:2212.12794].
+
+Three stages over two node sets (grid, mesh):
+  encode : grid -> mesh along g2m edges (per-edge MLP + sum-aggregate)
+  process: `n_layers` of mesh<->mesh interaction-network blocks (edge update
+           MLP on [e, src, dst], node update MLP on [node, agg]), residual,
+           parameters STACKED and scanned (16 identical blocks)
+  decode : mesh -> grid along m2g edges + output head (n_vars)
+
+The grid<->mesh edge sets are built by the STREAK spatial substrate
+(core.squadtree.radius_join) in data/graphs.py — the paper's distance join
+as graph construction (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    n_vars: int = 227
+    mesh_refinement: int = 6
+    aggregator: str = "sum"
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def n_params(self) -> int:
+        h = self.d_hidden
+        enc = self.n_vars * h + 3 * h * h          # embed + g2m edge/node MLPs
+        proc = self.n_layers * (3 * h * h + 2 * h * h)
+        dec = 3 * h * h + h * self.n_vars
+        return enc + proc + dec
+
+
+def _mlp_init(key, d_in, d_h, d_out, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, (d_in, d_h), dtype=dtype),
+            "w2": dense_init(k2, (d_h, d_out), dtype=dtype)}
+
+
+def _mlp(p, x):
+    return jax.nn.silu(x @ p["w1"]) @ p["w2"]
+
+
+def init_params(key, cfg: GraphCastConfig):
+    dt = cfg.jdtype
+    h = cfg.d_hidden
+    ks = layers.split_keys(key, 10)
+    L = cfg.n_layers
+
+    def stack_mlp(k, d_in, d_out):
+        k1, k2 = jax.random.split(k)
+        return {"w1": dense_init(k1, (L, d_in, h), in_axis=1, dtype=dt),
+                "w2": dense_init(k2, (L, h, d_out), in_axis=1, dtype=dt)}
+
+    return {
+        "grid_embed": dense_init(ks[0], (cfg.n_vars, h), dtype=dt),
+        "g2m_edge": _mlp_init(ks[1], 2 * h, h, h, dt),
+        "g2m_node": _mlp_init(ks[2], 2 * h, h, h, dt),
+        "proc_edge": stack_mlp(ks[3], 3 * h, h),
+        "proc_node": stack_mlp(ks[4], 2 * h, h),
+        "m2g_edge": _mlp_init(ks[5], 2 * h, h, h, dt),
+        "m2g_node": _mlp_init(ks[6], 2 * h, h, h, dt),
+        "out_head": dense_init(ks[7], (h, cfg.n_vars), dtype=dt),
+    }
+
+
+def _bipartite(edge_mlp, node_mlp, src_feats, dst_feats, edges, n_dst,
+               aggregator):
+    src, dst = edges[0], edges[1]
+    e_in = jnp.concatenate([src_feats[src], dst_feats[dst]], axis=-1)
+    msg = _mlp(edge_mlp, e_in)
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_dst)
+    if aggregator == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones((len(src), 1), msg.dtype), dst,
+                                  num_segments=n_dst)
+        agg = agg / jnp.maximum(cnt, 1.0)
+    return _mlp(node_mlp, jnp.concatenate([dst_feats, agg], axis=-1))
+
+
+def forward(params, grid_x: jnp.ndarray, g2m: jnp.ndarray,
+            mesh_edges: jnp.ndarray, m2g: jnp.ndarray, n_mesh: int,
+            cfg: GraphCastConfig) -> jnp.ndarray:
+    """grid_x (Ng, n_vars); g2m (2, E1) grid->mesh; mesh_edges (2, Em);
+    m2g (2, E2) mesh->grid. Returns next-state (Ng, n_vars)."""
+    n_grid = grid_x.shape[0]
+    g = (grid_x.astype(cfg.jdtype) @ params["grid_embed"])
+    m0 = jnp.zeros((n_mesh, cfg.d_hidden), cfg.jdtype)
+    m = m0 + _bipartite(params["g2m_edge"], params["g2m_node"], g, m0, g2m,
+                        n_mesh, cfg.aggregator)
+
+    src, dst = mesh_edges[0], mesh_edges[1]
+    e = jnp.zeros((src.shape[0], cfg.d_hidden), cfg.jdtype)
+
+    def body(carry, lp):
+        m, e = carry
+        e_in = jnp.concatenate([e, m[src], m[dst]], axis=-1)
+        e = e + _mlp(lp["edge"], e_in)
+        agg = jax.ops.segment_sum(e, dst, num_segments=n_mesh)
+        m = m + _mlp(lp["node"], jnp.concatenate([m, agg], axis=-1))
+        return (m, e), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (m, e), _ = jax.lax.scan(
+        body, (m, e),
+        {"edge": params["proc_edge"], "node": params["proc_node"]})
+
+    g = g + _bipartite(params["m2g_edge"], params["m2g_node"], m, g, m2g,
+                       n_grid, cfg.aggregator)
+    return (g @ params["out_head"]).astype(jnp.float32)
+
+
+def mse_loss(params, grid_x, target, g2m, mesh_edges, m2g, n_mesh,
+             cfg: GraphCastConfig):
+    pred = forward(params, grid_x, g2m, mesh_edges, m2g, n_mesh, cfg)
+    return jnp.mean((pred - target.astype(jnp.float32)) ** 2)

@@ -1,0 +1,82 @@
+"""Shared model building blocks: norms, rotary embedding, activations, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "sq_relu":      # squared ReLU (Primer; Nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind}")
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """Rotary embedding. x (..., S, H, Dh); positions (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def shard_activations(x: jnp.ndarray, batch_axes: tuple, seq_axes: tuple):
+    """Megatron-SP style residual-stream constraint: (B, S, D) with batch
+    over the data axes and sequence over "model". The remat-saved per-layer
+    carry shrinks by the model-axis factor; XLA inserts the all-gather /
+    reduce-scatter pair at the TP boundary."""
+    if not batch_axes and not seq_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(batch_axes) if batch_axes else None,
+             tuple(seq_axes) if seq_axes else None, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,290 @@
+"""Mixture-of-Experts transformer (qwen2-moe-a2.7b, qwen3-moe-30b-a3b).
+
+Routing: softmax top-k with optional shared experts (qwen2-moe: 4 shared +
+60 routed top-4; qwen3-moe: 128 routed top-8). Dispatch is SORT-BASED with a
+fixed per-expert capacity (dropless up to the capacity factor): token->expert
+pairs are ranked within their expert via an argsort, gathered into an
+(E, C, D) buffer, pushed through per-expert GEMMs, and scatter-added back
+weighted by the router probability. No (T, E, C) one-hot tensor is ever
+materialized (GShard-style einsum dispatch is O(T*E*C) memory — hopeless at
+65k tokens/device).
+
+Sharding contract: the expert axis E maps to the logical "model" axis
+(expert parallelism); tokens stay replicated across "model" for routing, and
+the scatter-add back is a partial-sum that XLA turns into a psum over the
+expert shards. E is zero-padded to a multiple of the mesh axis when needed
+(qwen2-moe: 60 -> 64) and the router masks padding experts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, transformer
+from .layers import activation, apply_norm, dense_init, init_norm, rope
+from .transformer import TransformerConfig, _attention
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig(TransformerConfig):
+    n_experts: int = 8          # routed experts (logical, pre-padding)
+    n_experts_padded: int = 8   # physical experts (divisible by mesh "model")
+    top_k: int = 2
+    d_ff_expert: int = 512
+    n_shared: int = 0           # shared experts, each of d_ff_expert width
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    def n_params(self) -> int:
+        qkv = self.d_model * self.head_dim * (self.n_heads + 2 * self.n_kv_heads)
+        o = self.n_heads * self.head_dim * self.d_model
+        moe = self.n_experts * 3 * self.d_model * self.d_ff_expert
+        shared = self.n_shared * 3 * self.d_model * self.d_ff_expert
+        router = self.d_model * self.n_experts
+        per_layer = qkv + o + moe + shared + router
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+    def n_active_params(self) -> int:
+        qkv = self.d_model * self.head_dim * (self.n_heads + 2 * self.n_kv_heads)
+        o = self.n_heads * self.head_dim * self.d_model
+        moe = self.top_k * 3 * self.d_model * self.d_ff_expert
+        shared = self.n_shared * 3 * self.d_model * self.d_ff_expert
+        router = self.d_model * self.n_experts
+        per_layer = qkv + o + moe + shared + router
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+
+def init_params(key, cfg: MoEConfig):
+    dt = cfg.jdtype
+    ks = layers.split_keys(key, 12)
+    L, D, H, Hk, Dh = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                       cfg.n_kv_heads, cfg.head_dim)
+    E, Fe = cfg.n_experts_padded, cfg.d_ff_expert
+
+    def stack(k, shape):
+        return dense_init(k, (L,) + shape, in_axis=1, dtype=dt)
+
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab, D), in_axis=1, dtype=dt),
+        "layers": {
+            "wq": stack(ks[1], (D, H * Dh)),
+            "wk": stack(ks[2], (D, Hk * Dh)),
+            "wv": stack(ks[3], (D, Hk * Dh)),
+            "wo": stack(ks[4], (H * Dh, D)),
+            "router": stack(ks[5], (D, E)),
+            # per-expert SwiGLU weights, expert axis ("model"-sharded)
+            "we_gate": dense_init(ks[6], (L, E, D, Fe), in_axis=2, dtype=dt),
+            "we_up": dense_init(ks[7], (L, E, D, Fe), in_axis=2, dtype=dt),
+            "we_down": dense_init(ks[8], (L, E, Fe, D), in_axis=2, dtype=dt),
+            "ln1": jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape),
+                                init_norm(cfg.norm, D)),
+            "ln2": jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape),
+                                init_norm(cfg.norm, D)),
+        },
+        "final_norm": init_norm(cfg.norm, D),
+    }
+    if cfg.n_shared:
+        Fs = cfg.n_shared * Fe
+        params["layers"]["ws_gate"] = stack(ks[9], (D, Fs))
+        params["layers"]["ws_up"] = stack(ks[10], (D, Fs))
+        params["layers"]["ws_down"] = stack(ks[11], (Fs, D))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[11], (D, cfg.vocab), in_axis=0,
+                                       dtype=dt)
+    return params
+
+
+def moe_ffn(lp, x: jnp.ndarray, cfg: MoEConfig):
+    """x (T, D) -> (y (T, D), aux_loss scalar)."""
+    t, d = x.shape
+    e, k = cfg.n_experts_padded, cfg.top_k
+    cap = int(max(1, round(t * k / cfg.n_experts * cfg.capacity_factor)))
+    cap = min(cap, t)
+    logits = (x @ lp["router"]).astype(jnp.float32)          # (T, E)
+    if cfg.n_experts_padded != cfg.n_experts:
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalize
+
+    # --- sort-based dispatch -------------------------------------------
+    flat_e = top_e.reshape(-1)                                # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within expert segment = position - segment start
+    seg_start = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+    rank = jnp.arange(t * k) - seg_start[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)          # overflow -> sink
+    # gather tokens into (E, C, D); sink row is zeros
+    token_of_slot = jnp.full((e * cap + 1,), t, dtype=jnp.int32)  # t = pad row
+    token_of_slot = token_of_slot.at[slot].set(
+        jnp.where(keep, st_, t).astype(jnp.int32))
+    weight_of_slot = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sw, 0.0))
+    token_of_slot = token_of_slot[:-1]
+    weight_of_slot = weight_of_slot[:-1]
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = x_pad[token_of_slot].reshape(e, cap, d)
+    # --- per-expert GEMMs (E sharded over "model") -----------------------
+    gate = jnp.einsum("ecd,edf->ecf", xg, lp["we_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xg, lp["we_up"])
+    h = activation(gate, cfg.act) * up
+    y_slots = jnp.einsum("ecf,efd->ecd", h, lp["we_down"]).reshape(e * cap, d)
+    y_slots = y_slots * weight_of_slot[:, None].astype(y_slots.dtype)
+    # --- combine: scatter-add back to tokens ----------------------------
+    y = jnp.zeros((t + 1, d), y_slots.dtype).at[token_of_slot].add(y_slots)[:t]
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (t * k)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return y.astype(x.dtype), aux
+
+
+def _layer(lp, x, cfg: MoEConfig, positions):
+    b, s, d = x.shape
+    x = layers.shard_activations(x, cfg.batch_axes, cfg.seq_axes)
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    attn = _attention(q, k, v, cfg, causal=True,
+                      q_positions=positions, kv_positions=positions)
+    x = x + attn.reshape(b, s, -1) @ lp["wo"]
+    h2 = apply_norm(x, lp["ln2"], cfg.norm)
+    y, aux = moe_ffn(lp, h2.reshape(b * s, d), cfg)
+    y = y.reshape(b, s, d)
+    if cfg.n_shared:
+        y = y + (activation(h2 @ lp["ws_gate"], cfg.act)
+                 * (h2 @ lp["ws_up"])) @ lp["ws_down"]
+    return x + y, aux
+
+
+def forward(params, tokens: jnp.ndarray, cfg: MoEConfig):
+    """tokens (B, S) -> (hidden (B, S, D), mean aux loss)."""
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(x, lp):
+        x, aux = _layer(lp, x, cfg, positions)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxes = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(x, params["final_norm"], cfg.norm), jnp.mean(auxes)
+
+
+def lm_loss(params, tokens, cfg: MoEConfig):
+    """Sequence-chunked, rematerialized vocab projection (see transformer)."""
+    hidden, aux = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    b, s, d = hidden.shape
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    nc = cfg.loss_chunks if cfg.loss_chunks > 1 and s % cfg.loss_chunks == 0 \
+        else 1
+    hc = hidden.reshape(b, nc, s // nc, d).swapaxes(0, 1)
+    tc = targets.reshape(b, nc, s // nc).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        h, tgt = xs
+        logits = (h @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk_loss, prevent_cse=False),
+                            jnp.float32(0.0), (hc, tc))
+    return total / (b * s) + cfg.router_aux_weight * aux
+
+
+def forward_with_cache(params, tokens: jnp.ndarray, cfg: MoEConfig):
+    """Prefill twin of transformer.forward_with_cache (MoE FFN)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(s), tokens.shape)
+
+    def body(x, lp):
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        attn = _attention(q, k, v, cfg, causal=True,
+                          q_positions=positions, kv_positions=positions)
+        x = x + attn.reshape(b, s, -1) @ lp["wo"]
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        y, _ = moe_ffn(lp, h2.reshape(b * s, -1), cfg)
+        y = y.reshape(b, s, -1)
+        if cfg.n_shared:
+            y = y + (activation(h2 @ lp["ws_gate"], cfg.act)
+                     * (h2 @ lp["ws_up"])) @ lp["ws_down"]
+        return x + y, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x[:, -1, :] @ head, {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------- decode ---
+def init_cache(cfg: MoEConfig, batch: int, max_seq: int):
+    return transformer.init_cache(cfg, batch, max_seq)
+
+
+def decode_step(params, cache, tokens, pos, cfg: MoEConfig):
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(cfg.jdtype)
+    positions = pos[:, None]
+    max_seq = cache["k"].shape[2]
+    kv_pos = jnp.arange(max_seq)[None, :]
+
+    def update_cache(cache, new, positions_):
+        if cfg.scatter_cache_update:
+            return jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(
+                    c, u, (p, jnp.int32(0), jnp.int32(0))))(
+                cache, new, positions_)
+        onehot = (kv_pos == positions_[:, None]).astype(cfg.jdtype)
+        return cache + onehot[:, :, None, None] * new
+
+    def body(carry, inp):
+        x, = carry
+        lp, k_cache, v_cache = inp
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q = (h @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_cache = update_cache(k_cache, k, pos)
+        v_cache = update_cache(v_cache, v, pos)
+        attn = _attention(q, k_cache, v_cache, cfg, causal=True,
+                          q_positions=positions, kv_positions=kv_pos)
+        x = x + attn.reshape(b, 1, -1) @ lp["wo"]
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        y, _ = moe_ffn(lp, h2.reshape(b, -1), cfg)
+        y = y.reshape(b, 1, -1)
+        if cfg.n_shared:
+            y = y + (activation(h2 @ lp["ws_gate"], cfg.act)
+                     * (h2 @ lp["ws_up"])) @ lp["ws_down"]
+        return (x + y,), (k_cache, v_cache)
+
+    (x,), (new_k, new_v) = jax.lax.scan(
+        body, (x,), (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x[:, 0, :] @ head, {"k": new_k, "v": new_v}

@@ -1,0 +1,121 @@
+"""SASRec: self-attentive sequential recommendation [arXiv:1808.09781].
+
+Item embedding table (the recsys hot path: lookup = jnp.take; bag-style
+multi-hot features would use take + segment_sum) -> learned positional
+embedding -> `n_blocks` causal single-head transformer blocks -> dot-product
+scoring against item embeddings.
+
+Serving integrates the paper's technique end-to-end: `retrieval_cand`
+(1 query x 10^6 candidates) and `serve_bulk` run through STREAK's block-wise
+top-k with threshold early termination (serve/retrieval.py), i.e. the
+ORDER BY ... LIMIT machinery minus the spatial filter.
+
+Sharding: item table row-shards over "model" (vocab parallelism); batch over
+("pod","data").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import dense_init, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    d_ff: int = 50
+    dropout: float = 0.2
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 2 * d * self.d_ff
+        return (self.n_items + self.seq_len) * d + self.n_blocks * per_block
+
+
+def init_params(key, cfg: SASRecConfig):
+    dt = cfg.jdtype
+    d = cfg.embed_dim
+    ks = layers.split_keys(key, 2 + 6 * cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kq, kk, kv, ko, k1, k2 = jax.random.split(ks[2 + i], 6)
+        blocks.append({
+            "wq": dense_init(kq, (d, d), dtype=dt),
+            "wk": dense_init(kk, (d, d), dtype=dt),
+            "wv": dense_init(kv, (d, d), dtype=dt),
+            "wo": dense_init(ko, (d, d), dtype=dt),
+            "w1": dense_init(k1, (d, cfg.d_ff), dtype=dt),
+            "w2": dense_init(k2, (cfg.d_ff, d), dtype=dt),
+            "ln1_scale": jnp.ones((d,), dt), "ln1_bias": jnp.zeros((d,), dt),
+            "ln2_scale": jnp.ones((d,), dt), "ln2_bias": jnp.zeros((d,), dt),
+        })
+    return {
+        "item_embed": dense_init(ks[0], (cfg.n_items, d), in_axis=1, dtype=dt),
+        "pos_embed": dense_init(ks[1], (cfg.seq_len, d), in_axis=1, dtype=dt),
+        "blocks": blocks,
+    }
+
+
+def encode(params, seq: jnp.ndarray, cfg: SASRecConfig) -> jnp.ndarray:
+    """seq (B, S) int32 item ids (0 = padding) -> user states (B, S, D)."""
+    b, s = seq.shape
+    d = cfg.embed_dim
+    x = params["item_embed"][seq] * (d ** 0.5) + params["pos_embed"][None, :s]
+    pad = (seq == 0)
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    mask = causal[None] & ~pad[:, None, :]
+    for blk in params["blocks"]:
+        h = layer_norm(x, blk["ln1_scale"], blk["ln1_bias"])
+        q, k, v = h @ blk["wq"], h @ blk["wk"], h @ blk["wv"]
+        logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * (d ** -0.5)
+        logits = jnp.where(mask, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        x = x + (jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
+                 .astype(x.dtype)) @ blk["wo"]
+        h = layer_norm(x, blk["ln2_scale"], blk["ln2_bias"])
+        x = x + jax.nn.relu(h @ blk["w1"]) @ blk["w2"]
+    return x
+
+
+def user_state(params, seq: jnp.ndarray, cfg: SASRecConfig) -> jnp.ndarray:
+    """Last-position state (B, D)."""
+    return encode(params, seq, cfg)[:, -1, :]
+
+
+def score_candidates(params, state: jnp.ndarray,
+                     candidates: jnp.ndarray) -> jnp.ndarray:
+    """state (B, D) x candidates (B, C) item ids -> (B, C) scores."""
+    emb = params["item_embed"][candidates]            # (B, C, D)
+    return jnp.einsum("bd,bcd->bc", state, emb)
+
+
+def score_all(params, state: jnp.ndarray) -> jnp.ndarray:
+    """Full-catalog scores (B, N_items) — offline bulk scoring path."""
+    return state @ params["item_embed"].T
+
+
+def bpr_loss(params, seq, pos_items, neg_items, cfg: SASRecConfig):
+    """Sequence-to-sequence BPR: predict item t+1 at every position."""
+    states = encode(params, seq, cfg)                  # (B, S, D)
+    pe = params["item_embed"][pos_items]               # (B, S, D)
+    ne = params["item_embed"][neg_items]
+    pos_s = jnp.sum(states * pe, axis=-1)
+    neg_s = jnp.sum(states * ne, axis=-1)
+    valid = (pos_items != 0).astype(jnp.float32)
+    ll = jax.nn.log_sigmoid(pos_s - neg_s) * valid
+    return -ll.sum() / jnp.maximum(valid.sum(), 1.0)

@@ -1,0 +1,315 @@
+"""Dense decoder-only transformer with GQA, RoPE and pluggable FFN.
+
+Covers nemotron-4-15b (squared-ReLU), codeqwen1.5-7b (SwiGLU),
+gemma-7b (GeGLU, head_dim 256). Layer parameters are STACKED with a leading
+`n_layers` axis and the forward pass is a `lax.scan`, so HLO size (and
+compile time on the 512-device dry-run) is depth-independent.
+
+Sharding contract (logical axes, see dist/partitioning.py):
+  embed (V, D):    ("model", None)      - vocab row-shard
+  Wq/Wk/Wv:        (None, None,"model") - head column-shard
+  Wo:              (None, "model", None) - row-shard
+  w_up/w_gate:     (None, None, "model")
+  w_down:          (None, "model", None)
+Activations: batch -> ("pod","data"), d_model unsharded, heads -> "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import activation, apply_norm, dense_init, init_norm, rope
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "transformer"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    act: str = "silu"          # silu | gelu | sq_relu
+    glu: bool = True           # gated FFN (SwiGLU/GeGLU); False = plain MLP
+    norm: str = "rms"
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    window: int | None = None  # sliding-window attention (serve-time bound)
+    dtype: str = "bfloat16"
+    remat: bool = True
+    loss_chunks: int = 8       # vocab-projection chunking for the LM loss
+    use_flash: bool = False    # route attention through the Pallas kernel
+    attn_chunk: int | None = None  # query-chunked attention (32k prefill):
+    #   bounds the (B,H,chunk,S) logit buffer instead of (B,H,S,S)
+    batch_axes: tuple = ()     # residual-stream sharding constraint (SP):
+    seq_axes: tuple = ()       #   batch over these axes, seq over these
+    attn_bf16_operands: bool = False  # keep QK^T / PV operands in bf16 with
+    #   f32 MXU accumulation (halves decode cache read traffic)
+    scatter_cache_update: bool = False  # decode: per-slot DUS scatter
+    #   instead of one-hot full-cache multiply-add
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def n_params(self) -> int:
+        qkv = self.d_model * self.head_dim * (self.n_heads + 2 * self.n_kv_heads)
+        o = self.n_heads * self.head_dim * self.d_model
+        ff = self.d_model * self.d_ff * (3 if self.glu else 2)
+        per_layer = qkv + o + ff
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+
+def init_params(key, cfg: TransformerConfig):
+    dt = cfg.jdtype
+    ks = layers.split_keys(key, 8)
+    L, D, H, Hk, Dh, F = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                          cfg.n_kv_heads, cfg.head_dim, cfg.d_ff)
+
+    def stack(k, shape):
+        return dense_init(k, (L,) + shape, in_axis=1, dtype=dt)
+
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab, D), in_axis=1, dtype=dt),
+        "layers": {
+            "wq": stack(ks[1], (D, H * Dh)),
+            "wk": stack(ks[2], (D, Hk * Dh)),
+            "wv": stack(ks[3], (D, Hk * Dh)),
+            "wo": stack(ks[4], (H * Dh, D)),
+            "w_up": stack(ks[5], (D, F)),
+            "w_down": stack(ks[6], (F, D)),
+            "ln1": jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape),
+                                init_norm(cfg.norm, D)),
+            "ln2": jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape),
+                                init_norm(cfg.norm, D)),
+        },
+        "final_norm": init_norm(cfg.norm, D),
+    }
+    if cfg.glu:
+        params["layers"]["w_gate"] = stack(ks[7], (D, F))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[7], (D, cfg.vocab), in_axis=0,
+                                       dtype=dt)
+    return params
+
+
+def _attention(q, k, v, cfg: TransformerConfig, causal: bool,
+               kv_positions=None, q_positions=None):
+    """q (B,S,H,Dh), k/v (B,T,Hk,Dh) -> (B,S,H,Dh). fp32 softmax."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    hk = k.shape[2]
+    g = h // hk
+    if cfg.use_flash and s == t and s % 128 == 0:
+        from ..kernels import ops as kops
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal)
+        return out.transpose(0, 2, 1, 3)
+    if cfg.attn_chunk is not None and s > cfg.attn_chunk \
+            and s % cfg.attn_chunk == 0:
+        if q_positions is None:
+            q_positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        ck = cfg.attn_chunk
+        nc = s // ck
+        qc = q.reshape(b, nc, ck, h, dh).transpose(1, 0, 2, 3, 4)
+        qp = q_positions.reshape(b, nc, ck).transpose(1, 0, 2)
+        base = dataclasses.replace(cfg, attn_chunk=None)
+
+        def one(args):
+            qi, qpi = args
+            return _attention(qi, k, v, base, causal,
+                              kv_positions=kv_positions, q_positions=qpi)
+
+        out = jax.lax.map(one, (qc, qp))
+        return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    qg = q.reshape(b, s, hk, g, dh)
+    if cfg.attn_bf16_operands:
+        # bf16 reads, f32 accumulation on the MXU: half the HBM traffic for
+        # the (large, cache-resident) K/V operands
+        logits = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                            preferred_element_type=jnp.float32) * (dh ** -0.5)
+    else:
+        logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * (dh ** -0.5)
+    if q_positions is None:
+        q_positions = jnp.arange(s)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(t)[None, :]
+    mask = kv_positions[:, None, :] <= q_positions[:, :, None]  # (B,S,T)
+    if cfg.window is not None:
+        mask &= kv_positions[:, None, :] > (q_positions[:, :, None] - cfg.window)
+    if not causal:
+        mask = jnp.ones_like(mask)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    if cfg.attn_bf16_operands:
+        out = jnp.einsum("bhgst,bthd->bshgd", w.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhgst,bthd->bshgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def _ffn(lp, x, cfg: TransformerConfig):
+    up = x @ lp["w_up"]
+    if cfg.glu:
+        up = activation(x @ lp["w_gate"], cfg.act) * up
+    else:
+        up = activation(up, cfg.act)
+    return up @ lp["w_down"]
+
+
+def _layer(lp, x, cfg: TransformerConfig, positions):
+    b, s, d = x.shape
+    x = layers.shard_activations(x, cfg.batch_axes, cfg.seq_axes)
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    attn = _attention(q, k, v, cfg, causal=True,
+                      q_positions=positions, kv_positions=positions)
+    x = x + attn.reshape(b, s, -1) @ lp["wo"]
+    x = x + _ffn(lp, apply_norm(x, lp["ln2"], cfg.norm), cfg)
+    return x
+
+
+def forward(params, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """tokens (B, S) int32 -> final hidden states (B, S, D)."""
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(x, lp):
+        return _layer(lp, x, cfg, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(x, params["final_norm"], cfg.norm)
+
+
+def logits_fn(params, hidden, cfg: TransformerConfig):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return hidden @ head
+
+
+def lm_loss(params, tokens, cfg: TransformerConfig):
+    """Causal LM loss with the vocab projection chunked over the SEQUENCE
+    axis (batch stays data-sharded through the reshape) and rematerialized,
+    so neither forward nor backward holds more than one (B, sc, V) logit
+    chunk."""
+    hidden = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    b, s, d = hidden.shape
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    nc = cfg.loss_chunks if cfg.loss_chunks > 1 and s % cfg.loss_chunks == 0 \
+        else 1
+    hc = hidden.reshape(b, nc, s // nc, d).swapaxes(0, 1)   # (nc, B, sc, D)
+    tc = targets.reshape(b, nc, s // nc).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        h, t = xs
+        logits = (h @ head).astype(jnp.float32)             # (B, sc, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk_loss, prevent_cse=False),
+                            jnp.float32(0.0), (hc, tc))
+    return total / (b * s)
+
+
+def forward_with_cache(params, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """Prefill: returns (last-token logits (B, V), kv cache dict).
+
+    Cache layout matches decode_step: (L, B, S, Hkv, Dh).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(s), tokens.shape)
+
+    def body(x, lp):
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        attn = _attention(q, k, v, cfg, causal=True,
+                          q_positions=positions, kv_positions=positions)
+        x = x + attn.reshape(b, s, -1) @ lp["wo"]
+        x = x + _ffn(lp, apply_norm(x, lp["ln2"], cfg.norm), cfg)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = logits_fn(params, x[:, -1, :], cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+# ----------------------------------------------------------------- decode ---
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.jdtype),
+            "v": jnp.zeros(shape, cfg.jdtype)}
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
+                cfg: TransformerConfig):
+    """One-token decode. tokens (B,) int32; pos (B,) current positions.
+
+    Returns (logits (B, V), new_cache). The KV cache sequence axis may be
+    sharded (long-context serving): the attention below reduces over the full
+    cached axis, which XLA partitions into partial-softmax + all-reduce.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(cfg.jdtype)  # (B,1,D)
+    positions = pos[:, None]
+    max_seq = cache["k"].shape[2]
+    kv_pos = jnp.arange(max_seq)[None, :]
+
+    def update_cache(cache, new, positions_):
+        if cfg.scatter_cache_update:
+            # per-slot scatter (vmapped DUS): touches one row per sequence
+            # instead of multiply-adding over the whole cache
+            return jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(
+                    c, u, (p, jnp.int32(0), jnp.int32(0))))(
+                cache, new, positions_)
+        onehot = (kv_pos == positions_[:, None]).astype(cfg.jdtype)
+        return cache + onehot[:, :, None, None] * new
+
+    def body(carry, inp):
+        x, = carry
+        lp, k_cache, v_cache = inp
+        h = apply_norm(x, lp["ln1"], cfg.norm)
+        q = (h @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_cache = update_cache(k_cache, k, pos)
+        v_cache = update_cache(v_cache, v, pos)
+        attn = _attention(q, k_cache, v_cache, cfg, causal=True,
+                          q_positions=positions, kv_positions=kv_pos)
+        x = x + attn.reshape(b, 1, -1) @ lp["wo"]
+        x = x + _ffn(lp, apply_norm(x, lp["ln2"], cfg.norm), cfg)
+        return (x,), (k_cache, v_cache)
+
+    (x,), (new_k, new_v) = jax.lax.scan(
+        body, (x,), (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = logits_fn(params, x[:, 0, :], cfg)
+    return logits, {"k": new_k, "v": new_v}

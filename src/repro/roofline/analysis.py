@@ -1,0 +1,197 @@
+"""Three-term roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_dot_FLOPs_per_device / peak_FLOPs      [s]
+    memory term     = HLO_bytes_per_device / HBM_bw              [s]
+    collective term = collective_bytes_per_device / link_bw      [s]
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. All artifact numbers are per-device and loop-weighted
+(hlo_parse), so the terms are directly comparable step times.
+
+MODEL_FLOPS uses the 6*N*D (train) / 2*N*D (inference) convention with
+N_active for MoE; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy
+waste.
+
+    PYTHONPATH=src python -m repro.roofline.analysis [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape: str, n_devices: int) -> float:
+    """Useful-math FLOPs per device per step (6ND / 2ND convention)."""
+    from ..configs import registry
+    mod = registry.get(arch)
+    spec = mod.SHAPES[shape]
+    cfg = mod.CONFIG
+    fam = mod.FAMILY
+
+    if fam in ("lm", "moe"):
+        n = cfg.n_active_params() if fam == "moe" else cfg.n_params()
+        if spec["kind"] == "train":
+            tok = spec["global_batch"] * spec["seq_len"]
+            return 6.0 * n * tok / n_devices
+        if spec["kind"] == "prefill":
+            tok = spec["global_batch"] * spec["seq_len"]
+            return 2.0 * n * tok / n_devices
+        tok = spec["global_batch"]  # decode: one token per sequence
+        return 2.0 * n * tok / n_devices
+    return 0.0
+
+
+def _gnn_model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from ..configs import registry
+    mod = registry.get(arch)
+    spec = mod.SHAPES[shape]
+    cfg = mod.CONFIG
+    fam = mod.FAMILY
+    if spec["kind"] == "sampled":
+        b = spec["batch_nodes"]
+        f1, f2 = spec["fanout"]
+        nodes = b * (1 + f1 + f1 * f2)
+        edges = b * f1 + b * f1 * f2
+    elif spec["kind"] == "batched":
+        nodes = spec["n_nodes"] * spec["batch"]
+        edges = spec["n_edges"] * spec["batch"]
+    else:
+        nodes, edges = spec["n_nodes"], spec["n_edges"]
+    if fam == "graphcast":
+        h = cfg.d_hidden
+        fl = 2 * nodes * cfg.n_vars * h          # encode/decode embeds
+        fl += cfg.n_layers * (2 * edges * 3 * h * h + 2 * nodes * 2 * h * h)
+        fl += 2 * (4 * nodes) * 2 * h * h * 2    # bipartite MLPs
+        return 3.0 * fl / n_devices              # fwd+bwd
+    if fam == "nequip":
+        from ..models.equivariant import allowed_paths
+        paths = len(allowed_paths(cfg.l_max))
+        c = cfg.n_channels
+        per_edge = paths * c * (9 + 25) + cfg.n_rbf * cfg.radial_hidden \
+            + cfg.radial_hidden * paths * c
+        fl = cfg.n_layers * (2 * edges * per_edge
+                             + 2 * nodes * (cfg.l_max + 1) * c * c * 5)
+        return 3.0 * fl / n_devices
+    # gcn / sage
+    dims = [spec["d_feat"]] + [cfg.d_hidden] * (cfg.n_layers - 1) \
+        + [max(spec["n_classes"], 2)]
+    fl = 0.0
+    for a, b2 in zip(dims[:-1], dims[1:]):
+        fl += 2 * nodes * a * b2 * (2 if cfg.arch == "sage" else 1)
+        fl += edges * a  # message gather+reduce
+    return 3.0 * fl / n_devices
+
+
+def _recsys_model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from ..configs import registry
+    mod = registry.get(arch)
+    spec = mod.SHAPES[shape]
+    cfg = mod.CONFIG
+    d = cfg.embed_dim
+    per_tok = cfg.n_blocks * (4 * d * d + 2 * d * cfg.d_ff) * 2
+    if spec["kind"] == "train":
+        fl = 3 * spec["batch"] * cfg.seq_len * (per_tok
+                                                + cfg.seq_len * d * 2) + \
+            3 * spec["batch"] * cfg.seq_len * 2 * d * 2
+        return fl / n_devices
+    b = spec.get("batch", 1)
+    enc = b * cfg.seq_len * (per_tok + cfg.seq_len * d * 2)
+    if spec["kind"] == "retrieval":
+        score = b * spec["n_candidates"] * 2 * d
+    else:
+        score = b * cfg.n_items * 2 * d
+    return (enc + score) / n_devices
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    from ..configs import registry
+    fam = registry.get(arch).FAMILY
+    if fam in ("lm", "moe"):
+        return model_flops_per_device(arch, shape, n_devices)
+    if fam == "recsys":
+        return _recsys_model_flops(arch, shape, n_devices)
+    return _gnn_model_flops(arch, shape, n_devices)
+
+
+def analyze(rec: dict) -> dict:
+    coll = sum(v["bytes"] for v in rec["collectives"].values())
+    t_compute = rec["dot_flops_per_device"] / PEAK_FLOPS
+    t_memory = rec["hbm_bytes_per_device"] / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"], rec["n_devices"])
+    ratio = mf / max(rec["dot_flops_per_device"], 1.0)
+    # roofline fraction: useful-FLOPs time / bound time (an achievable-MFU
+    # style score; 1.0 = useful math fully hides behind the binding term)
+    frac = (mf / PEAK_FLOPS) / max(bound, 1e-12)
+    peak_gib = (rec["arg_bytes"] + rec["temp_bytes"] + rec["out_bytes"]) / 2**30
+    recs = {
+        "compute": "compute-bound: raise MFU via larger tiles / fused "
+                   "attention; remat ratio shows recompute overhead",
+        "memory": "memory-bound: cut activation traffic (fusion, bf16 "
+                  "carries, flash attention keeps logits in VMEM)",
+        "collective": "collective-bound: reshard to cut all-gathers "
+                      "(2D sharding, overlap, gradient compression)",
+    }
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "n_devices")},
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_device": mf, "useful_ratio": ratio,
+        "roofline_fraction": frac, "peak_gib": peak_gib,
+        "note": recs[dominant],
+    }
+
+
+def load_all(mesh: str | None = None, variant: str = "base") -> list:
+    out = []
+    for p in sorted(ART.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if rec.get("variant", "base") != variant:
+            continue
+        out.append(analyze(rec))
+    return out
+
+
+def table(rows: list) -> str:
+    hdr = (f"| {'arch':<18s} | {'shape':<13s} | {'mesh':<7s} | "
+           f"{'compute s':>9s} | {'memory s':>9s} | {'collect s':>9s} | "
+           f"{'bound':<10s} | {'6ND/HLO':>7s} | {'roofline%':>9s} | "
+           f"{'peak GiB':>8s} |")
+    sep = "|" + "|".join("-" * (len(c) + 2) for c in
+                         ["arch" + " " * 14, "shape" + " " * 8, "mesh" + " " * 3,
+                          "compute s", "memory  s", "collect s",
+                          "bound" + " " * 5, "6ND/HLO", "roofline%", "peak GiB"]) + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']:<18s} | {r['shape']:<13s} | {r['mesh']:<7s} | "
+            f"{r['t_compute_s']:9.4f} | {r['t_memory_s']:9.4f} | "
+            f"{r['t_collective_s']:9.4f} | {r['dominant']:<10s} | "
+            f"{r['useful_ratio']:7.2f} | {r['roofline_fraction']*100:8.1f}% | "
+            f"{r['peak_gib']:8.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    args = ap.parse_args()
+    rows = load_all(args.mesh)
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,226 @@
+"""Optimized-HLO collective extraction with loop-aware accounting.
+
+cost_analysis() has no collective traffic, so we parse `compiled.as_text()`.
+Collectives inside `while` bodies (lax.scan over layers / loss chunks)
+appear ONCE in the text but execute `known_trip_count` times — we build the
+computation call graph, propagate trip-count multipliers from ENTRY, and
+weight each op's (per-device) result bytes accordingly.
+"""
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(%[\w\.\-]+|ENTRY\s+%?[\w\.\-]+)\s*(?:\([^)]*\))?")
+_WHILE_RE = re.compile(r"while\(")
+_BODY_RE = re.compile(r"body=(%[\w\.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count\":{\"n\":\"(\d+)\"")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=(%[\w\.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict:
+    comps: dict = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                name = m.group(1)
+                if name.startswith("ENTRY"):
+                    name = "ENTRY"
+                cur = name
+                comps[cur] = []
+                continue
+        if cur is not None and line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def _multipliers(comps: dict) -> dict:
+    """Trip-count multiplier per computation, propagated from ENTRY."""
+    mult = {name: 0.0 for name in comps}
+    mult["ENTRY"] = 1.0
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(12):
+        changed = False
+        for name, lines in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for line in lines:
+                trip = 1.0
+                if _WHILE_RE.search(line):
+                    t = _TRIP_RE.search(line)
+                    trip = float(t.group(1)) if t else 1.0
+                for callee in _CALL_RE.findall(line):
+                    new = m * trip
+                    if new > mult.get(callee, 0.0):
+                        mult[callee] = new
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+_NAME_SHAPE_RE = re.compile(r"^\s*(%[\w\.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)")
+_DOT_RE = re.compile(r"=\s*([a-z0-9]+\[[\d,]*\])\S*\s+dot\((%[\w\.\-]+),\s*(%[\w\.\-]+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"\((%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)\)")
+
+
+def _shape_dims(shape_str: str) -> tuple[str, list]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _name_shapes(hlo_text: str) -> dict:
+    """op name -> full shape string (first definition wins per comp scope;
+    shapes are what matter, collisions across comps share the same shape
+    text format so approximation is acceptable)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _NAME_SHAPE_RE.match(line)
+        if m and m.group(1) not in out:
+            out[m.group(1)] = m.group(2)
+    return out
+
+
+def dot_flops(hlo_text: str) -> float:
+    """Loop-weighted per-device dot FLOPs: 2 * out_elems * K per dot, where
+    K is the product of the lhs contracting dims."""
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+    shapes = _name_shapes(hlo_text)
+    total = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0) or 1.0
+        for line in lines:
+            if " dot(" not in f" {line}":
+                continue
+            dm = _DOT_RE.search(line)
+            if not dm:
+                continue
+            _, out_dims = _shape_dims(dm.group(1))
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            lhs_shape = shapes.get(dm.group(2), "")
+            _, lhs_dims = _shape_dims(lhs_shape)
+            cm = _LHS_CONTRACT_RE.search(line)
+            k = 1
+            if cm and lhs_dims:
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        k *= lhs_dims[int(ci)]
+            total += 2.0 * out_elems * k * m
+    return total
+
+
+_SKIP_OPS = (" parameter(", " constant(", " get-tuple-element(", " tuple(",
+             " bitcast(", " while(", " after-all(", " partition-id(",
+             " iota(")
+
+
+def hbm_bytes(hlo_text: str) -> float:
+    """Loop-weighted per-device HBM traffic estimate: result + operand bytes
+    of every top-level op in ENTRY and while bodies (fusion interiors are
+    fused: only the fusion's own boundary traffic counts)."""
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+    shapes = _name_shapes(hlo_text)
+    # schedulable = ENTRY + while bodies/conditions (reached via body=/condition=)
+    schedulable = {"ENTRY"}
+    for name, lines in comps.items():
+        for line in lines:
+            if _WHILE_RE.search(line):
+                for attr in ("body", "condition"):
+                    mm = re.search(attr + r"=(%[\w\.\-]+)", line)
+                    if mm:
+                        schedulable.add(mm.group(1))
+    total = 0.0
+    for name in schedulable:
+        lines = comps.get(name, [])
+        m = mult.get(name, 0.0) or 1.0
+        for line in lines:
+            padded = f" {line}"
+            if any(s in padded for s in _SKIP_OPS):
+                continue
+            lhs = line.split("=", 1)
+            if len(lhs) != 2:
+                continue
+            if " dynamic-update-slice(" in padded:
+                # in-place: traffic = read+write of the UPDATE slice only
+                om = _OPERAND_RE.search(lhs[1])
+                if om:
+                    ops = [o.strip() for o in om.group(1).split(",")]
+                    if len(ops) >= 2:
+                        total += 2 * _shape_bytes(shapes.get(ops[1], "")) * m
+                continue
+            if " dynamic-slice(" in padded:
+                total += 2 * _shape_bytes(lhs[1].split("(")[0]) * m
+                continue
+            b = _shape_bytes(lhs[1].split("(")[0])
+            om = _OPERAND_RE.search(lhs[1])
+            if om:
+                for opn in om.group(1).split(","):
+                    b += _shape_bytes(shapes.get(opn.strip(), ""))
+            total += b * m
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """kind -> {count, bytes, static_count}; bytes are per-device result
+    bytes weighted by loop trip counts ("-done" async halves skipped)."""
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+    out = {k: {"count": 0, "bytes": 0.0, "static_count": 0}
+           for k in COLLECTIVES}
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0) or (1.0 if name == "ENTRY" else 0.0)
+        if m == 0.0:
+            m = 1.0  # unreached comps (conservative)
+        for line in lines:
+            for kind in COLLECTIVES:
+                token = f" {kind}("
+                token_start = f" {kind}-start("
+                if token in f" {line}" or token_start in f" {line}":
+                    if f"{kind}-done" in line:
+                        continue
+                    lhs = line.split("=", 1)
+                    if len(lhs) != 2:
+                        continue
+                    head = lhs[1].split(kind)[0]
+                    b = _shape_bytes(head)
+                    out[kind]["static_count"] += 1
+                    out[kind]["count"] += int(m)
+                    out[kind]["bytes"] += b * m
+    return {k: v for k, v in out.items() if v["static_count"]}

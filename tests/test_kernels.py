@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import block_scan as bs
+from repro.kernels import bloom_probe as bp
+from repro.kernels import distance_join as dj
+from repro.kernels import flash_attention as fa
+from repro.kernels import morton_kernel as mk
+from repro.kernels import ops, ref
+
+
+def _boxes(rng, n):
+    pts = rng.random((n, 2)).astype(np.float32)
+    wh = rng.random((n, 2)).astype(np.float32) * 0.05
+    return np.concatenate([pts, pts + wh], axis=1)
+
+
+# --------------------------------------------------------- distance join ---
+@pytest.mark.parametrize("m,n", [(8, 8), (100, 260), (256, 256), (300, 513)])
+def test_distance_join_matches_ref(m, n):
+    rng = np.random.default_rng(0)
+    a, b = _boxes(rng, m), _boxes(rng, n)
+    got = dj.distance_join(jnp.asarray(a), jnp.asarray(b),
+                           bm=128, bn=128, interpret=True)
+    want = ref.distance_join_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_distance_join_agrees_with_engine_geometry():
+    from repro.core import geometry
+    rng = np.random.default_rng(1)
+    a, b = _boxes(rng, 64), _boxes(rng, 64)
+    want = geometry.box_min_dist(a[:, None, :].astype(np.float64),
+                                 b[None, :, :].astype(np.float64))
+    got = dj.distance_join(jnp.asarray(a), jnp.asarray(b),
+                           bm=64, bn=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------ bloom probe ---
+@pytest.mark.parametrize("nb,w,k", [(64, 8, 3), (1000, 16, 4), (2048, 8, 2)])
+def test_bloom_probe_matches_ref_and_numpy(nb, w, k):
+    from repro.core.charsets import BloomBank
+    rng = np.random.default_rng(2)
+    bank = BloomBank.empty(8, words=w, k=k)
+    ins_keys = rng.integers(0, 1 << 62, size=200, dtype=np.int64)
+    ins_f = rng.integers(0, 8, size=200, dtype=np.int64)
+    bank.add(ins_f, ins_keys)
+    probe_keys = np.concatenate([ins_keys[:nb // 2],
+                                 rng.integers(0, 1 << 62, size=nb - nb // 2,
+                                              dtype=np.int64)])[:nb]
+    probe_f = np.concatenate([ins_f[:nb // 2],
+                              rng.integers(0, 8, size=nb - nb // 2,
+                                           dtype=np.int64)])[:nb]
+    want_np = bank.contains(probe_f, probe_keys)
+    rows = jnp.asarray(bank.bits[probe_f])
+    u = probe_keys.view(np.uint64)
+    lo = jnp.asarray((u & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32))
+    hi = jnp.asarray((u >> np.uint64(32)).astype(np.uint32).view(np.int32))
+    want_ref = np.asarray(ref.bloom_probe_ref(rows, lo, hi, k))
+    got = np.asarray(bp.bloom_probe(rows, lo, hi, k=k, bb=256,
+                                    interpret=True)) == 1
+    np.testing.assert_array_equal(want_np, want_ref)
+    np.testing.assert_array_equal(got, want_ref)
+
+
+# -------------------------------------------------------------- block scan --
+@pytest.mark.parametrize("nb,bsz", [(4, 128), (16, 1024), (1, 256)])
+@pytest.mark.parametrize("theta", [-1e30, 0.5, 2.0])
+def test_block_scan_matches_ref(nb, bsz, theta):
+    rng = np.random.default_rng(3)
+    scores = rng.normal(0.5, 0.5, size=(nb, bsz)).astype(np.float32)
+    g_max, g_cnt, g_mask = bs.block_scan(jnp.asarray(scores), theta,
+                                         interpret=True)
+    w_max, w_cnt, w_mask = ref.block_scan_ref(jnp.asarray(scores), theta)
+    np.testing.assert_allclose(np.asarray(g_max), np.asarray(w_max), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(g_cnt), np.asarray(w_cnt))
+    np.testing.assert_array_equal(np.asarray(g_mask), np.asarray(w_mask))
+
+
+# ------------------------------------------------------------------ morton --
+@pytest.mark.parametrize("n", [100, 1024, 5000])
+def test_morton_kernel_matches_ref_and_numpy(n):
+    from repro.core import morton
+    rng = np.random.default_rng(4)
+    cx = rng.integers(0, 1 << 16, size=n).astype(np.int32)
+    cy = rng.integers(0, 1 << 16, size=n).astype(np.int32)
+    got = np.asarray(mk.morton_encode(jnp.asarray(cx), jnp.asarray(cy),
+                                      interpret=True))
+    want = np.asarray(ref.morton_ref(jnp.asarray(cx), jnp.asarray(cy)))
+    want_np = morton.interleave2(cx.astype(np.int64), cy.astype(np.int64))
+    np.testing.assert_array_equal(got, want)
+    # int32 codes can use the sign bit for 16-bit inputs: compare unsigned
+    np.testing.assert_array_equal(got.view(np.uint32).astype(np.uint64),
+                                  want_np.astype(np.uint64))
+
+
+# -------------------------------------------------------- flash attention ---
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 2, 2, 128, 64),     # MHA
+    (1, 4, 2, 128, 64),     # GQA group 2
+    (2, 8, 1, 256, 32),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(b, hq, hkv, s, d, causal):
+    rng = np.random.default_rng(5)
+    q = rng.normal(size=(b, hq, s, d)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, s, d)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, s, d)).astype(np.float32)
+    got = fa.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             causal=causal, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                   jnp.asarray(v), causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), dtype=jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype=jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype=jnp.bfloat16)
+    got = fa.flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                             interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ------------------------------------------------------- ops dispatch layer --
+def test_ops_mask_matches_engine_backend():
+    rng = np.random.default_rng(7)
+    a, b = _boxes(rng, 40), _boxes(rng, 50)
+    mask_k = np.asarray(ops.distance_join_mask(a, b, 0.05, interpret=True))
+    from repro.core import geometry
+    d = geometry.box_min_dist(a[:, None, :].astype(np.float64),
+                              b[None, :, :].astype(np.float64))
+    np.testing.assert_array_equal(mask_k, d <= 0.05)

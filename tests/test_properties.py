@@ -1,0 +1,98 @@
+"""Hypothesis property tests on system invariants (random databases)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import join
+from repro.core.join import Relation
+
+
+@st.composite
+def relations(draw, max_rows=40):
+    n_a = draw(st.integers(1, max_rows))
+    n_b = draw(st.integers(1, max_rows))
+    dom = draw(st.integers(2, 8))
+    a = Relation({
+        "x": np.asarray(draw(st.lists(st.integers(0, dom), min_size=n_a,
+                                      max_size=n_a)), dtype=np.int64),
+        "y": np.asarray(draw(st.lists(st.integers(0, dom), min_size=n_a,
+                                      max_size=n_a)), dtype=np.int64),
+    })
+    b = Relation({
+        "x": np.asarray(draw(st.lists(st.integers(0, dom), min_size=n_b,
+                                      max_size=n_b)), dtype=np.int64),
+        "z": np.asarray(draw(st.lists(st.integers(0, dom), min_size=n_b,
+                                      max_size=n_b)), dtype=np.int64),
+    })
+    return a, b
+
+
+def _brute_join(a: Relation, b: Relation, on):
+    rows = []
+    for i in range(a.n):
+        for j in range(b.n):
+            if all(a[c][i] == b[c][j] for c in on):
+                rows.append(tuple(
+                    [a[c][i] for c in sorted(a)] +
+                    [b[c][j] for c in sorted(b) if c not in a]))
+    return sorted(rows)
+
+
+@given(relations())
+@settings(max_examples=60, deadline=None)
+def test_sort_merge_join_matches_nested_loop(ab):
+    a, b = ab
+    got = join.join(a, b)
+    cols = sorted(a) + [c for c in sorted(b) if c not in a]
+    got_rows = sorted(tuple(int(got[c][i]) for c in cols)
+                      for i in range(got.n))
+    assert got_rows == _brute_join(a, b, ["x"])
+
+
+@given(relations())
+@settings(max_examples=40, deadline=None)
+def test_semijoin_is_join_projection(ab):
+    a, b = ab
+    semi = join.semijoin(a, b)
+    full = join.join(a, b)
+    want = {tuple(int(full[c][i]) for c in sorted(a))
+            for i in range(full.n)}
+    got = {tuple(int(semi[c][i]) for c in sorted(a))
+           for i in range(semi.n)}
+    assert got == want
+
+
+@given(st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=60),
+       st.lists(st.tuples(st.integers(0, 10 ** 6), st.integers(0, 10 ** 6)),
+                min_size=0, max_size=10))
+@settings(max_examples=60, deadline=None)
+def test_filter_in_ranges_matches_set_semantics(vals, ranges):
+    from repro.core.join import filter_in_ranges
+    vals_arr = np.asarray(vals, dtype=np.int64)
+    rel = Relation({"e": vals_arr})
+    intervals = np.asarray([[min(a, b), max(a, b)] for a, b in ranges],
+                           dtype=np.int64).reshape(-1, 2)
+    explicit = np.asarray(sorted(set(vals[:2])), dtype=np.int64)
+    got = filter_in_ranges(rel, "e", intervals, explicit)
+    want = [v for v in vals
+            if any(lo <= v <= hi for lo, hi in intervals)
+            or v in set(explicit.tolist())]
+    assert sorted(got["e"].tolist()) == sorted(want)
+
+
+@given(st.integers(10, 200), st.integers(1, 20), st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_topk_threshold_monotone(n, k, seed):
+    from repro.core.topk import TopK
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=n)
+    tk = TopK(k=k)
+    thetas = []
+    for i in range(0, n, 7):
+        chunk = scores[i:i + 7]
+        tk.push(chunk, Relation({"r": np.arange(len(chunk), dtype=np.int64)}))
+        thetas.append(tk.theta)
+    # theta is monotonically non-decreasing (descending mode)
+    assert all(b >= a - 1e-12 for a, b in zip(thetas, thetas[1:]))
+    got, _ = tk.results()
+    want = np.sort(scores)[::-1][:k]
+    np.testing.assert_allclose(np.sort(got)[::-1], want)

@@ -1,0 +1,239 @@
+"""Distribution substrate tests: checkpoint, fault tolerance, compression,
+elastic resharding, data pipeline, retrieval primitives, serving engine."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import graphs, recsys, tokens
+from repro.dist import elastic, grad_compression
+from repro.models import transformer
+from repro.serve import retrieval
+from repro.train import checkpoint, fault, loop, optim
+
+
+# ------------------------------------------------------------- checkpoint ---
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    ck = checkpoint.Checkpointer(tmp_path, keep=2)
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4))}, "step": 7}
+    for s in (1, 2, 3):
+        ck.save(s, tree, blocking=True)
+    assert ck.latest_step() == 3
+    restored, step = ck.restore(tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(10.0))
+    # retention: only 2 newest kept
+    dirs = [p.name for p in ck.dir.iterdir() if p.name.startswith("step_")]
+    assert len(dirs) == 2
+
+
+def test_checkpoint_atomic_latest(tmp_path):
+    ck = checkpoint.Checkpointer(tmp_path, keep=3)
+    ck.save(5, {"x": jnp.zeros(3)}, blocking=True)
+    (tmp_path / "step_000000006").mkdir()  # crash artifact without manifest
+    (tmp_path / "LATEST").write_text("step_000000006")
+    assert ck.latest_step() is None  # refuses corrupt pointer
+
+
+# ------------------------------------------------- trainer + fault inject ---
+def _tiny_cfg():
+    return transformer.TransformerConfig(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab=64, dtype="float32", remat=False, loss_chunks=1)
+
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    cfg = _tiny_cfg()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    stream = tokens.TokenStream(cfg.vocab, 16, 8, seed=1)
+
+    def loss_fn(p, batch):
+        return transformer.lm_loss(p, batch, cfg)
+
+    tcfg = loop.TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=5,
+                              log_every=100)
+    tr = loop.Trainer(loss_fn, params, tcfg)
+    hist = tr.fit(lambda s: (jnp.asarray(stream.batch(s)),), n_steps=30)
+    assert np.mean(hist[:5]) > np.mean(hist[-5:])  # it learns
+    # resume from checkpoint: a new trainer continues at saved step
+    tr2 = loop.Trainer(loss_fn, params, tcfg)
+    assert tr2.maybe_restore()
+    assert tr2.step == 30
+
+
+def test_trainer_recovers_from_injected_failure(tmp_path):
+    cfg = _tiny_cfg()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    stream = tokens.TokenStream(cfg.vocab, 16, 8, seed=2)
+
+    def loss_fn(p, batch):
+        return transformer.lm_loss(p, batch, cfg)
+
+    tcfg = loop.TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=5,
+                              log_every=1000, max_restarts=2)
+    tr = loop.Trainer(loss_fn, params, tcfg)
+    inj = fault.FailureInjector(fail_at_steps=(12,))
+    hist = tr.fit(lambda s: (jnp.asarray(stream.batch(s)),), n_steps=20,
+                  injector=inj)
+    assert tr.step == 20  # finished despite the failure at step 12
+
+
+def test_step_guard_detects_straggler():
+    import time
+    with pytest.raises(fault.StragglerTimeout):
+        with fault.StepGuard(0.05):
+            time.sleep(0.2)
+
+
+# ------------------------------------------------------- grad compression ---
+def test_ef_compression_bias_vanishes_over_steps():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    acc_true = np.zeros(256)
+    acc_comp = np.zeros(256)
+    for _ in range(50):
+        codes, scale, err = grad_compression.ef_compress(g, err)
+        acc_true += np.asarray(g)
+        acc_comp += np.asarray(grad_compression.decompress(codes, scale))
+    # accumulated compressed sum tracks the true sum (error feedback)
+    rel = np.abs(acc_comp - acc_true).max() / np.abs(acc_true).max()
+    assert rel < 0.02
+
+
+def test_compression_is_4x_smaller():
+    g = jnp.ones((1024,), jnp.float32)
+    codes, scale = grad_compression.compress(g)
+    assert codes.dtype == jnp.int8 and codes.nbytes * 4 == g.nbytes
+
+
+# ------------------------------------------------------------- elastic ------
+def test_elastic_shrink_and_reshard():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >= 2 devices")
+    mesh = jax.make_mesh((n // 1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    x = jax.device_put(jnp.arange(n * 4.0).reshape(n, 4),
+                       NamedSharding(mesh, P("data", None)))
+    new_mesh = elastic.shrink_mesh(mesh, n_lost=1, model_axis="model")
+    assert new_mesh.devices.size <= n - 1 or n == 1
+    y = elastic.reshard_tree({"x": x}, {"x": x.sharding}, new_mesh)
+    np.testing.assert_array_equal(np.asarray(y["x"]), np.asarray(x))
+
+
+def test_elastic_respec_folds_pod_axis():
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    new_mesh = Mesh(dev, ("data", "model"),
+                    axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    old_mesh = Mesh(dev.reshape(1, 1, 1), ("pod", "data", "model"),
+                    axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    s = NamedSharding(old_mesh, P(("pod", "data"), None))
+    ns = elastic.respec(s, new_mesh)
+    assert ns.spec == P(("data",), None)
+
+
+# ------------------------------------------------------------ data pipes ----
+def test_token_stream_deterministic_and_sharded():
+    a = tokens.TokenStream(100, 8, 4, seed=3, process_index=0,
+                           process_count=2)
+    b = tokens.TokenStream(100, 8, 4, seed=3, process_index=1,
+                           process_count=2)
+    x0 = a.batch(0)
+    assert x0.shape == (2, 9)
+    np.testing.assert_array_equal(x0, a.batch(0))  # deterministic
+    assert not np.array_equal(x0, b.batch(0))      # different shard
+
+
+def test_neighbor_sampler_shapes_and_locality():
+    edges = graphs.random_power_law_graph(500, 6, seed=1)
+    feats = np.random.default_rng(0).normal(size=(500, 8)).astype(np.float32)
+    labels = np.zeros(500, dtype=np.int32)
+    samp = graphs.NeighborSampler(edges, 500, feats, labels, (5, 3), seed=0)
+    seeds = np.arange(16)
+    blk = samp.sample(seeds)
+    assert blk.edges.shape == (2, 16 * 5 + 16 * 5 * 3)
+    assert blk.mask.sum() == 16
+    n_local = (blk.nodes >= 0).sum()
+    assert blk.edges.max() < max(n_local, 1)
+
+
+def test_spatial_graph_matches_bruteforce():
+    rng = np.random.default_rng(2)
+    pos = rng.normal(size=(80, 3)) * 3
+    edges = graphs.spatial_graph(pos, cutoff=2.0)
+    d = np.sqrt(((pos[:, None] - pos[None]) ** 2).sum(-1))
+    expect = {(i, j) for i, j in zip(*np.nonzero(d <= 2.0)) if i != j}
+    # spatial_graph prunes on the xy-plane first then refines in 3d: every
+    # returned edge must be a true edge, and all true edges must be found
+    got = set(zip(edges[0].tolist(), edges[1].tolist()))
+    assert got == expect
+
+
+def test_embedding_bag_modes():
+    table = jnp.asarray(np.arange(20.0).reshape(10, 2))
+    idx = jnp.asarray([0, 1, 2, 5])
+    off = jnp.asarray([0, 2])   # bags: [0,1], [2,5]
+    s = recsys.embedding_bag(table, idx, off, "sum")
+    np.testing.assert_allclose(np.asarray(s),
+                               [[0 + 2, 1 + 3], [4 + 10, 5 + 11]])
+    m = recsys.embedding_bag(table, idx, off, "mean")
+    np.testing.assert_allclose(np.asarray(m), [[1, 2], [7, 8]])
+
+
+# ---------------------------------------------------------- retrieval -------
+def test_blocked_topk_matches_dense():
+    rng = np.random.default_rng(4)
+    state = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32))
+    items = jnp.asarray(rng.normal(size=(1000, 16)).astype(np.float32))
+    scores, ids = retrieval.blocked_topk(state, items, k=10, block=128)
+    dense = np.asarray(state @ items.T)
+    for b in range(3):
+        want = np.sort(dense[b])[::-1][:10]
+        np.testing.assert_allclose(np.sort(np.asarray(scores[b]))[::-1],
+                                   want, rtol=1e-5)
+
+
+def test_streak_topk_exact_and_early_terminates():
+    rng = np.random.default_rng(5)
+    state = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
+    items = jnp.asarray((rng.normal(size=(2000, 16))
+                         * rng.exponential(1.0, size=(2000, 1)))
+                        .astype(np.float32))
+    block = 128
+    items_sorted, order = retrieval.sort_items_by_norm(items, block)
+    bounds = retrieval.block_bounds(items_sorted, block)
+    scores, ids, blocks_read = retrieval.streak_topk(
+        state, items_sorted, order.astype(jnp.int32), bounds,
+        k=10, block=block)
+    dense = np.asarray(state @ items.T)
+    for b in range(2):
+        want = np.sort(dense[b])[::-1][:10]
+        np.testing.assert_allclose(np.sort(np.asarray(scores[b]))[::-1],
+                                   want, rtol=1e-5)
+        got_ids = set(np.asarray(ids[b]).tolist())
+        want_ids = set(np.argsort(-dense[b])[:10].tolist())
+        assert got_ids == want_ids
+    nb = -(-2000 // block)
+    assert int(blocks_read) < nb  # the paper's early-out actually fired
+
+
+# ---------------------------------------------------------- serve engine ----
+def test_serve_engine_continuous_batching():
+    from repro.serve.engine import Request, ServeEngine
+    cfg = _tiny_cfg()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(transformer, params, cfg, max_batch=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=4)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    # decode path consistency vs full forward
+    h = transformer.forward(params, jnp.asarray([[1, 2, 3]]), cfg)
+    lg = transformer.logits_fn(params, h, cfg)
+    assert reqs[0].out[0] == int(jnp.argmax(lg[0, -1]))
