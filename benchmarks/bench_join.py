@@ -1,19 +1,93 @@
-"""Fig. 8: candidate pairs, S-QuadTree join vs synchronous R-tree traversal.
+"""Fig. 8: candidate pairs, S-QuadTree join vs synchronous R-tree traversal
+— plus the fused-vs-matrix Phase-3 kernel comparison.
 
 The paper's key index ablation: same block pipeline, the spatial join
 swapped. We report MBR-level candidate counts (lower = better pruning) and
-end-to-end time.
+end-to-end time. The `fused_join/` section measures the streaming top-k
+kernel against the matrix+mask path across M, N, k: both compute the same
+global top-k pair set, but the fused path consumes the evolving θ between
+column batches (early termination inside the join) and never materializes
+the (M, N) matrix — its peak intermediate bytes are independent of N.
 """
 from __future__ import annotations
 
+import numpy as np
+
+from repro.core import spatial_join
 from repro.core.baselines import SyncRTreeEngine
 from repro.core.executor import ExecConfig, StreakEngine
+from repro.core.join import Relation
+from repro.core.topk import TopK
+from repro.kernels import ops as kops
 
 from . import common
 
+FUSED_BATCH = 2048
+
+
+def _rand_boxes(rng, n: int, side: float = 0.01) -> np.ndarray:
+    pts = rng.random((n, 2))
+    wh = rng.random((n, 2)) * side
+    return np.concatenate([pts, pts + wh], axis=1)
+
+
+def fused_vs_matrix() -> list:
+    """Same task both ways: global top-k in-distance pairs by score bound."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, n in ((2048, 2048), (8192, 2048), (8192, 8192)):
+        a, b = _rand_boxes(rng, m), _rand_boxes(rng, n)
+        a32, b32 = a.astype(np.float32), b.astype(np.float32)
+        dk, vk = rng.random(m), rng.random(n)
+        dist = 0.05
+        for k in (16, 64):
+            def run_matrix():
+                mask = np.asarray(kops.distance_join_mask(a32, b32, dist))
+                i, j = np.nonzero(mask)
+                s = dk[i] + vk[j]
+                if len(s) > k:
+                    s = s[np.argpartition(-s, k - 1)[:k]]
+                return np.sort(s)[::-1]
+
+            def run_fused():
+                tk = TopK(k=k)
+                for pi, pj in spatial_join.fused_stream_join(
+                        a, b, dk, vk, dist, k=k,
+                        theta_fn=lambda: tk.theta, batch_cols=FUSED_BATCH):
+                    tk.push(dk[pi] + vk[pj], Relation({"i": pi, "j": pj}))
+                return tk.results()[0]
+
+            # both paths must agree before being timed
+            np.testing.assert_allclose(run_matrix(), run_fused(), rtol=1e-6)
+            t_mat = common.timeit(run_matrix)
+            t_fus = common.timeit(run_fused)
+            peak_mat = m * n * 5          # f32 matrix + bool mask
+            peak_fus = m * FUSED_BATCH * 4 + m * k * 8
+            rows.append(common.row(
+                f"fused_join/m{m}_n{n}_k{k}_matrix", t_mat,
+                f"peak_bytes={peak_mat}"))
+            rows.append(common.row(
+                f"fused_join/m{m}_n{n}_k{k}_fused", t_fus,
+                f"peak_bytes={peak_fus};speedup={t_mat / t_fus:.2f}x"))
+    return rows
+
+
+def engine_backends() -> list:
+    """End-to-end engine time per Phase-3 backend on one dataset/query."""
+    rows = []
+    ds = common.dataset("lgd")
+    q = ds.queries[0]
+    for backend in ("numpy", "kernel", "fused"):
+        eng = StreakEngine(ds.store, ExecConfig(join_backend=backend))
+        eng.execute(q)  # warm caches / jit
+        t = common.timeit(lambda: eng.execute(q))
+        rows.append(common.row(f"fig8_join/backend_{backend}", t, ""))
+    return rows
+
 
 def run() -> list:
-    rows = []
+    rows = fused_vs_matrix()
+    rows += engine_backends()
     for ds_name in ("yago3", "lgd"):
         ds = common.dataset(ds_name)
         for qi, q in enumerate(ds.queries):

@@ -24,6 +24,17 @@ def run() -> list:
     rows.append(common.row("kernel/distance_join_1024x1024", t,
                            f"pairs_per_s={1024*1024/(t/1e6):.3e}"))
 
+    # fused streaming top-k join (jnp oracle path on CPU): same tile work
+    # plus the per-row top-k fold, HBM output (M, k) instead of (M, N)
+    dk = jnp.asarray(rng.random(1024).astype(np.float32))
+    vk = jnp.asarray(rng.random(1024).astype(np.float32))
+    g2 = jax.jit(lambda a_, b_, dk_, vk_: ref.fused_topk_join_ref(
+        a_, b_, dk_, vk_, 0.05, -jnp.inf, 32))
+    jax.block_until_ready(g2(a, b, dk, vk))
+    t = common.timeit(lambda: jax.block_until_ready(g2(a, b, dk, vk)))
+    rows.append(common.row("kernel/fused_topk_join_1024x1024_k32", t,
+                           f"pairs_per_s={1024*1024/(t/1e6):.3e}"))
+
     bits = jnp.asarray(rng.integers(0, 2**32, (8192, 8), dtype=np.uint32))
     lo = jnp.asarray(rng.integers(-2**31, 2**31, 8192, dtype=np.int32))
     hi = jnp.asarray(rng.integers(-2**31, 2**31, 8192, dtype=np.int32))

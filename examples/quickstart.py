@@ -10,7 +10,8 @@ from repro.core import (ExecConfig, Query, Ranking, SpatialFilter,
 from repro.core.dictionary import Dictionary
 
 
-def main() -> None:
+def build_demo():
+    """The quickstart store + query (also the fused-backend test workload)."""
     # --- tiny knowledge graph: wine regions + rivers (paper Fig. 1) -----
     d = Dictionary.empty()
     T = d.intern
@@ -64,7 +65,11 @@ def main() -> None:
         spatial=SpatialFilter(Var("g1"), Var("g2"), dist=25.0),
         ranking=Ranking(((Var("p"), 1.0), (Var("c"), 1.0)), descending=True),
         k=5)
+    return store, q
 
+
+def main() -> None:
+    store, q = build_demo()
     engine = StreakEngine(store, ExecConfig(block=16))
     scores, rows, stats = engine.execute(q)
     print("top-5 (production + pollution, within 25km):")

@@ -27,7 +27,8 @@ class ExecConfig:
     use_sip: bool = True
     force_plan: str | None = None       # "N" | "S" | None (adaptive)
     force_driver: str | None = None     # "a" | "b" | None
-    join_backend: str = "numpy"         # "numpy" | "kernel"
+    join_backend: str = "numpy"         # "numpy" | "kernel" | "fused"
+    fused_batch_cols: int = 4096        # driven columns per fused-kernel call
     mbr_join_fn: object = None          # override Phase-3 MBR join (baselines)
     select_params: node_select.SelectParams = dataclasses.field(
         default_factory=node_select.SelectParams)
@@ -110,6 +111,58 @@ class StreakEngine:
                 kw = self._kw(w, plan.descending)
                 out += kw * self.store.values_of(rel[var])
         return out
+
+    def _entity_key_bound(self, rel: Relation, ents: np.ndarray,
+                          side: SidePlan, plan: QueryPlan) -> np.ndarray:
+        """Per-entity upper bound on this side's score-key contribution.
+
+        Any result row pairing entities (e_i, e_j) joins one `rel` row per
+        side, so max-over-rows per entity bounds the pair's score key from
+        above — the soundness condition for the fused kernel's θ pruning.
+        Rows whose contribution is NaN (entity lacks a value) can never
+        score and count as -inf; an entity with only such rows gets -inf.
+        """
+        contrib = np.zeros(rel.n)
+        for tp, var, w in side.quant_terms:
+            kw = self._kw(w, plan.descending)
+            contrib += kw * self.store.values_of(rel[var])
+        contrib = np.where(np.isnan(contrib), -np.inf, contrib)
+        out = np.full(len(ents), -np.inf)
+        ent_col = rel[side.entity_var]
+        pos = np.searchsorted(ents, ent_col)        # ents is sorted unique
+        ok = (pos < len(ents)) & \
+            (ents[np.minimum(pos, len(ents) - 1)] == ent_col)
+        np.maximum.at(out, pos[ok], contrib[ok])
+        return out
+
+    def _emit_pairs(self, pi: np.ndarray, pj: np.ndarray,
+                    uniq_ents: np.ndarray, dvn_ents: np.ndarray,
+                    drv_rel: Relation, dvn_rel: Relation,
+                    driver: SidePlan, driven: SidePlan, plan: QueryPlan,
+                    topk: TopK, stats: ExecStats) -> None:
+        """Refine candidate pairs, join the relations back, score, push."""
+        if len(pi) == 0:
+            return
+        store = self.store
+        keep = spatial_join.refine(
+            pi, pj,
+            store.exact_geometry(uniq_ents[pi]),
+            store.exact_geometry(dvn_ents[pj]),
+            plan.dist_world, plan.metric, stats.join)
+        pi, pj = pi[keep], pj[keep]
+        if len(pi) == 0:
+            return
+        pair_rel = Relation({driver.entity_var: uniq_ents[pi],
+                             driven.entity_var: dvn_ents[pj]})
+        out = join(drv_rel, pair_rel)
+        out = join(out, dvn_rel)
+        if out.n == 0:
+            return
+        keys = self._score_key(out, plan)
+        valid = ~np.isnan(keys)
+        out, keys = out.take(np.flatnonzero(valid)), keys[valid]
+        stats.results_considered += out.n
+        topk.push(keys, out)
 
     # ------------------------------------------------------------------
     def execute(self, q: Query) -> tuple[np.ndarray, Relation, ExecStats]:
@@ -197,30 +250,25 @@ class StreakEngine:
             dvn_ents, dvn_boxes = dvn_ents[ok], dvn_boxes[ok]
             if len(dvn_ents) == 0:
                 continue
-            join_fn = cfg.mbr_join_fn or spatial_join.mbr_distance_join
-            pi, pj = join_fn(
-                boxes, dvn_boxes, plan.dist_norm, cfg.join_backend, stats.join)
-            if len(pi) == 0:
-                continue
-            keep = spatial_join.refine(
-                pi, pj,
-                store.exact_geometry(uniq_ents[pi]),
-                store.exact_geometry(dvn_ents[pj]),
-                plan.dist_world, plan.metric, stats.join)
-            pi, pj = pi[keep], pj[keep]
-            if len(pi) == 0:
-                continue
-            pair_rel = Relation({driver.entity_var: uniq_ents[pi],
-                                 driven.entity_var: dvn_ents[pj]})
-            out = join(drv_rel, pair_rel)
-            out = join(out, dvn_rel)
-            if out.n == 0:
-                continue
-            keys = self._score_key(out, plan)
-            valid = ~np.isnan(keys)
-            out, keys = out.take(np.flatnonzero(valid)), keys[valid]
-            stats.results_considered += out.n
-            topk.push(keys, out)
+            if cfg.mbr_join_fn is None and cfg.join_backend == "fused":
+                # streaming fused path: driven columns arrive in score-key
+                # order, each batch refined+scored+pushed before the next so
+                # the θ the kernel prunes with tightens inside the block
+                ds = self._entity_key_bound(drv_rel, uniq_ents, driver, plan)
+                vs = self._entity_key_bound(dvn_rel, dvn_ents, driven, plan)
+                for pi, pj in spatial_join.fused_stream_join(
+                        boxes, dvn_boxes, ds, vs, plan.dist_norm, k=plan.k,
+                        theta_fn=lambda: topk.theta,
+                        batch_cols=cfg.fused_batch_cols, stats=stats.join):
+                    self._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
+                                     dvn_rel, driver, driven, plan, topk,
+                                     stats)
+            else:
+                join_fn = cfg.mbr_join_fn or spatial_join.mbr_distance_join
+                pi, pj = join_fn(boxes, dvn_boxes, plan.dist_norm,
+                                 cfg.join_backend, stats.join)
+                self._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
+                                 dvn_rel, driver, driven, plan, topk, stats)
 
         keys, rows = topk.results()
         scores = keys if plan.descending else -keys

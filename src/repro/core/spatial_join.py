@@ -5,9 +5,19 @@ node_select.select + SIP filter material; this module is Phase 3 — the
 pairwise MBR distance join between a driver block and the SIP-filtered driven
 candidates — plus the exact-geometry refinement step.
 
-The MBR join is the compute hot spot; on TPU it runs through the
-`distance_join` Pallas kernel (kernels/distance_join.py); the numpy path here
-is the portable fallback and the oracle for tests.
+The MBR join is the compute hot spot. Three backends:
+
+- ``numpy``  — dense broadcast via geometry.box_min_dist; the portable
+  fallback and the oracle for tests.
+- ``kernel`` — the tiled Pallas matrix kernel (kernels/distance_join.py):
+  materializes the full (M, N) distance matrix, the caller masks it.
+- ``fused``  — the streaming top-k kernel (kernels/fused_topk_join.py):
+  driven entities are fed in score-key order, each column batch is reduced
+  in VMEM to per-row top-k partials under the current top-k threshold θ, and
+  the (M, N) matrix never exists. `fused_stream_join` below is the driver:
+  it re-reads θ between batches (so early termination prunes *inside* an
+  executor block) and recovers overflowing rows densely so the candidate
+  set stays exact.
 """
 from __future__ import annotations
 
@@ -15,7 +25,7 @@ import dataclasses
 
 import numpy as np
 
-from . import geometry
+from . import geometry, topk as topk_mod
 
 
 @dataclasses.dataclass
@@ -32,6 +42,22 @@ def mbr_distance_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
     """Candidate pairs (i, j) with box_min_dist <= dist (normalized space)."""
     if len(driver_boxes) == 0 or len(driven_boxes) == 0:
         return np.empty(0, np.int64), np.empty(0, np.int64)
+    if backend == "fused":
+        # pure-distance use of the streaming kernel: zero keys, θ = -inf.
+        # With nothing to prune this does MORE work than the matrix paths —
+        # it exists for drop-in equivalence (tests, ablations); the perf
+        # path is fused_stream_join with real keys via the executor.
+        pi, pj = [], []
+        for bi, bj in fused_stream_join(
+                driver_boxes, driven_boxes,
+                np.zeros(len(driver_boxes)), np.zeros(len(driven_boxes)),
+                dist_norm, k=64, stats=stats):
+            pi.append(bi)
+            pj.append(bj)
+        i = np.concatenate(pi) if pi else np.empty(0, np.int64)
+        j = np.concatenate(pj) if pj else np.empty(0, np.int64)
+        order = np.lexsort((j, i))      # match the dense row-major order
+        return i[order], j[order]
     if backend == "kernel":
         from ..kernels import ops as kops
         mask = np.asarray(kops.distance_join_mask(
@@ -46,6 +72,154 @@ def mbr_distance_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
         stats.candidates += int(mask.sum())
     i, j = np.nonzero(mask)
     return i.astype(np.int64), j.astype(np.int64)
+
+
+def _sanitize_keys(keys: np.ndarray, n: int) -> np.ndarray:
+    """Per-entity score-key upper bounds as f32; NaN (no value -> the row can
+    never produce a scored result) maps to -inf so the kernel drops it.
+
+    Engine score keys are f64; round-to-nearest f32 conversion may round a
+    bound *below* the true key, which would make θ pruning unsound. Nudge
+    any rounded-down value one ulp toward +inf so the f32 bound stays a true
+    upper bound (false survivors are harmless — scoring decides).
+    """
+    if keys is None:
+        return np.zeros(n, dtype=np.float32)
+    keys64 = np.asarray(keys, dtype=np.float64)
+    k32 = keys64.astype(np.float32)
+    low = k32.astype(np.float64) < keys64
+    k32 = np.where(low, np.nextafter(k32, np.float32(np.inf)), k32)
+    return np.where(np.isnan(k32), -np.inf, k32).astype(np.float32)
+
+
+def _theta32_lower(theta: float) -> np.float32:
+    """θ as f32 rounded toward -inf: the kernel must never prune with a θ
+    above the true f64 threshold."""
+    t32 = np.float32(theta)
+    if np.isfinite(t32) and float(t32) > theta:
+        t32 = np.nextafter(t32, np.float32(-np.inf))
+    return t32
+
+
+def fused_stream_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
+                      driver_keys: np.ndarray, driven_keys: np.ndarray,
+                      dist_norm: float, k: int,
+                      theta_fn=None, batch_cols: int = 4096,
+                      interpret: bool | None = None,
+                      stats: JoinStats | None = None):
+    """Streaming Phase-3 join: yields (pi, pj) candidate batches.
+
+    Driven entities are processed in descending score-key order, one
+    `batch_cols`-wide column batch per fused-kernel call, so:
+
+    - `theta_fn()` (the shared TopK threshold) is re-read before every batch
+      and pushed into the kernel's VMEM predicate — results the caller pushes
+      between batches tighten the filter mid-block;
+    - once ``max(driver_keys) + driven_keys[next] <= θ`` no later pair can
+      enter the top-k (keys are sorted), and the scan stops — the paper's
+      early termination applied *inside* a block;
+    - peak intermediate memory is O(M * batch_cols), independent of N.
+
+    The kernel emits fixed-width (M, k) per-row partials plus exact survivor
+    counts; rows whose survivors overflow the width are recovered densely
+    (only those rows, only this batch), keeping the candidate set exactly
+    equal to the matrix backends'. Pairs are (driver row, driven row) indices
+    into the *original* (unsorted) arrays.
+    """
+    from ..kernels import ops as kops
+
+    m, n = len(driver_boxes), len(driven_boxes)
+    if m == 0 or n == 0:
+        return
+    ds = _sanitize_keys(driver_keys, m)
+    vs = _sanitize_keys(driven_keys, n)
+    ds_max = float(ds.max()) if m else -np.inf
+    order = np.argsort(-vs, kind="stable")
+    dvn_sorted = np.ascontiguousarray(driven_boxes[order], dtype=np.float32)
+    vs_sorted = vs[order]
+    drv = np.ascontiguousarray(driver_boxes, dtype=np.float32)
+    # partial width: a floor above k keeps the (rare but expensive) dense
+    # overflow recovery off the common path when θ is still loose
+    kcap = min(max(int(k), 64), batch_cols)
+
+    for start in range(0, n, batch_cols):
+        theta = float(theta_fn()) if theta_fn is not None else -np.inf
+        # early termination inside the block: the best remaining pair bound
+        # cannot beat theta, and keys only decrease from here
+        if ds_max + float(vs_sorted[start]) <= theta:
+            break
+        theta32 = _theta32_lower(theta)
+        chunk = dvn_sorted[start:start + batch_cols]
+        ck = vs_sorted[start:start + batch_cols]
+        scores, idx, counts = kops.fused_topk_join(
+            drv, chunk, ds, ck, float(dist_norm), theta32, k=kcap,
+            interpret=interpret)
+        idx = np.asarray(idx)
+        counts = np.asarray(counts)
+        if stats is not None:
+            stats.pairs_tested += m * len(chunk)
+
+        ok_rows = counts <= kcap
+        sel = (idx >= 0) & ok_rows[:, None]
+        pi = np.nonzero(sel)[0].astype(np.int64)
+        pj_local = idx[sel].astype(np.int64)
+        over = np.flatnonzero(~ok_rows)
+        if len(over):
+            # width overflow: recover those rows densely — same f32 arrays,
+            # same f32 distance formula and θ the kernel used, so recovered
+            # rows see exactly the kernel's predicate
+            d = np.asarray(kops.distance_join_matrix(
+                drv[over], chunk, interpret=interpret))
+            bound = ds[over][:, None] + ck[None, :]
+            oi, oj = np.nonzero((d <= np.float32(dist_norm))
+                                & (bound > theta32))
+            pi = np.concatenate([pi, over[oi].astype(np.int64)])
+            pj_local = np.concatenate([pj_local, oj.astype(np.int64)])
+        if len(pi) == 0:
+            continue
+        pj = order[start + pj_local]
+        srt = np.lexsort((pj, pi))
+        pi, pj = pi[srt], pj[srt]
+        if stats is not None:
+            stats.candidates += len(pi)
+        yield pi, pj
+
+
+def fused_topk_pairs(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
+                     driver_keys: np.ndarray, driven_keys: np.ndarray,
+                     dist_norm: float, k: int, theta: float = -np.inf,
+                     batch_cols: int = 4096,
+                     interpret: bool | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Global per-row top-k of the fused join, without densifying.
+
+    Runs the streaming kernel batch by batch and absorbs the per-batch
+    (M, k) partials through topk.merge_row_partials (the two-level merge:
+    tiles fold in-kernel, batches fold here). Returns (scores (M, k),
+    idx (M, k) into the original driven array), -inf/-1 padded.
+    """
+    from ..kernels import ops as kops
+
+    m, n = len(driver_boxes), len(driven_boxes)
+    ds = _sanitize_keys(driver_keys, m)
+    vs = _sanitize_keys(driven_keys, n)
+    kcap = max(int(k), 1)
+    theta32 = _theta32_lower(float(theta))
+    parts = []
+    for start in range(0, n, batch_cols):
+        chunk = np.ascontiguousarray(
+            driven_boxes[start:start + batch_cols], dtype=np.float32)
+        scores, idx, _ = kops.fused_topk_join(
+            np.ascontiguousarray(driver_boxes, dtype=np.float32), chunk,
+            ds, vs[start:start + batch_cols], float(dist_norm), theta32,
+            k=kcap, interpret=interpret)
+        idx = np.asarray(idx).astype(np.int64)
+        parts.append((np.asarray(scores),
+                      np.where(idx >= 0, idx + start, -1)))
+    if not parts:
+        return (np.full((m, kcap), -np.inf, np.float32),
+                np.full((m, kcap), -1, np.int64))
+    return topk_mod.merge_row_partials(parts, kcap)
 
 
 def refine(pairs_i: np.ndarray, pairs_j: np.ndarray,

@@ -64,3 +64,40 @@ class TopK:
 
     def _keyf(self, s: float) -> float:
         return s if self.descending else -s
+
+
+# ----------------------------------------------------- per-row partial merge --
+def _merge2(a: tuple[np.ndarray, np.ndarray],
+            b: tuple[np.ndarray, np.ndarray], k: int
+            ) -> tuple[np.ndarray, np.ndarray]:
+    s = np.concatenate([a[0], b[0]], axis=1)
+    i = np.concatenate([a[1], b[1]], axis=1)
+    if s.shape[1] <= k:
+        return s, i
+    order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(s, order, 1), np.take_along_axis(i, order, 1)
+
+
+def merge_row_partials(parts: list, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Two-level absorption of per-row top-k partials (fused join backend).
+
+    Level 1 happens inside the fused kernel (tiles of one column batch fold
+    into an (M, k) partial); this is level 2: partials from successive column
+    batches merge pairwise — tournament style, (M, 2k) peak — into the global
+    per-row top-k. The dense (M, N) matrix is never rebuilt.
+
+    `parts` is a list of (scores (M, w_i), idx (M, w_i)) pairs; returns the
+    merged (scores (M, <=k), idx) sorted descending per row, -inf/-1 padded.
+    """
+    if not parts:
+        raise ValueError("merge_row_partials needs at least one partial")
+    parts = list(parts)
+    while len(parts) > 1:
+        nxt = [_merge2(parts[i], parts[i + 1], k)
+               for i in range(0, len(parts) - 1, 2)]
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    s, i = parts[0]
+    order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(s, order, 1), np.take_along_axis(i, order, 1)

@@ -1,0 +1,7 @@
+"""Distribution substrate: elastic resharding + gradient compression.
+
+Companions to repro.launch.mesh — mesh construction lives there, while this
+package owns what happens to shardings and gradients when the mesh changes
+(device loss, pod folding) or when cross-pod bandwidth is the bottleneck.
+"""
+from . import elastic, grad_compression  # noqa: F401

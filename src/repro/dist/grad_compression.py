@@ -1,0 +1,61 @@
+"""Int8 gradient compression with error feedback.
+
+The cross-pod all-reduce in the multi-pod mesh (launch/mesh.py) moves full
+f32 gradients; linear-scale int8 quantization cuts that traffic 4x. Plain
+quantization biases the update, so `ef_compress` carries the quantization
+residual forward (error feedback): the *accumulated* decompressed sum tracks
+the accumulated true sum, which is the property the optimizer needs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def compress(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """g (f32) -> (codes int8, scale f32 scalar): codes * scale ~= g."""
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(g / safe), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+@jax.jit
+def decompress(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale
+
+
+@jax.jit
+def ef_compress(g: jnp.ndarray, err: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Error-feedback compression step.
+
+    Compresses g + carried error; the new residual (what quantization lost
+    this step) is returned to be added to the next step's gradient.
+    """
+    target = g + err
+    codes, scale = compress(target)
+    new_err = target - decompress(codes, scale)
+    return codes, scale, new_err
+
+
+def init_error_state(params):
+    """Zero residuals shaped like the parameters (trainer hook)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def tree_ef_compress_roundtrip(grads, err_state):
+    """Compress+decompress every gradient leaf with error feedback.
+
+    Models what the cross-pod all-reduce sees (quantize, transfer, restore);
+    returns (decompressed grads, new error state) mirroring the input trees.
+    """
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = jax.tree.leaves(err_state)
+    out_g, out_e = [], []
+    for g, e in zip(leaves_g, leaves_e):
+        codes, scale, new_e = ef_compress(g, e)
+        out_g.append(decompress(codes, scale))
+        out_e.append(new_e)
+    return treedef.unflatten(out_g), treedef.unflatten(out_e)

@@ -6,6 +6,8 @@ call site for both worlds.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,6 +16,7 @@ from . import block_scan as _bs
 from . import bloom_probe as _bp
 from . import distance_join as _dj
 from . import flash_attention as _fa
+from . import fused_topk_join as _ftj
 from . import morton_kernel as _mk
 from . import ref
 
@@ -34,6 +37,33 @@ def distance_join_matrix(driver, driven, interpret: bool | None = None):
 def distance_join_mask(driver, driven, dist: float,
                        interpret: bool | None = None):
     return distance_join_matrix(driver, driven, interpret) <= dist
+
+
+def fused_topk_join(driver, driven, driver_keys, driven_keys,
+                    dist: float, theta: float, k: int = 64,
+                    interpret: bool | None = None):
+    """Streaming per-row top-k distance join; see kernels/fused_topk_join.py.
+
+    Returns (scores (M, k), idx (M, k), counts (M,)) — the per-row partials
+    the `fused` join backend consumes. On CPU without interpret mode this
+    runs the dense jnp oracle (still per column *batch* when called through
+    core/spatial_join.py, so peak memory stays independent of total N).
+    """
+    driver = jnp.asarray(driver, dtype=jnp.float32)
+    driven = jnp.asarray(driven, dtype=jnp.float32)
+    dk = jnp.asarray(driver_keys, dtype=jnp.float32)
+    vk = jnp.asarray(driven_keys, dtype=jnp.float32)
+    if _on_tpu() or interpret:
+        return _ftj.fused_topk_join(
+            driver, driven, dk, vk, dist, theta, k=k,
+            interpret=bool(interpret) and not _on_tpu())
+    return _fused_ref_jit(driver, driven, dk, vk,
+                          jnp.float32(dist), jnp.float32(theta), k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _fused_ref_jit(driver, driven, dk, vk, dist, theta, k):
+    return ref.fused_topk_join_ref(driver, driven, dk, vk, dist, theta, k)
 
 
 def bloom_probe(bits, keys, k: int = 3, interpret: bool | None = None):

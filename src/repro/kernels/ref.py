@@ -22,6 +22,39 @@ def distance_join_ref(driver: jnp.ndarray, driven: jnp.ndarray) -> jnp.ndarray:
     return jnp.sqrt(dx * dx + dy * dy).astype(jnp.float32)
 
 
+# ------------------------------------------------- fused top-k distance join --
+def fused_topk_join_ref(driver: jnp.ndarray, driven: jnp.ndarray,
+                        driver_keys: jnp.ndarray, driven_keys: jnp.ndarray,
+                        dist, theta, k: int
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense oracle for kernels/fused_topk_join.py.
+
+    Materializes the (M, N) distance matrix (it is the *specification*, not
+    the streaming implementation) and reduces it to the same (M, k) per-row
+    partials: pair survives iff box_dist <= dist AND key bound
+    driver_keys[i] + driven_keys[j] > theta. Returns (scores (M, k),
+    idx (M, k) int32, counts (M,) int32) padded with -inf / -1.
+    """
+    d = distance_join_ref(driver, driven)
+    bound = (driver_keys.astype(jnp.float32)[:, None]
+             + driven_keys.astype(jnp.float32)[None, :])
+    valid = (d <= dist) & (bound > theta)
+    m, n = d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+    s = jnp.where(valid, bound, -jnp.inf)
+    i = jnp.where(valid, col, -1)
+    kk = min(k, n)
+    top_s, pos = jax.lax.top_k(s, kk)
+    top_i = jnp.take_along_axis(i, pos, axis=1)
+    top_i = jnp.where(jnp.isneginf(top_s), -1, top_i)
+    if kk < k:  # fewer candidates than the partial width: pad
+        top_s = jnp.pad(top_s, ((0, 0), (0, k - kk)),
+                        constant_values=-jnp.inf)
+        top_i = jnp.pad(top_i, ((0, 0), (0, k - kk)), constant_values=-1)
+    counts = jnp.sum(valid.astype(jnp.int32), axis=1)
+    return top_s, top_i, counts
+
+
 # -------------------------------------------------------------- bloom probe --
 def _mix32_jnp(x, seed: int):
     x = (x + jnp.uint32(0x9E3779B9) * jnp.uint32(seed + 1)).astype(jnp.uint32)

@@ -13,12 +13,17 @@ from __future__ import annotations
 import jax
 
 
+def _axis_kwargs(n_axes: int) -> dict:
+    """axis_types only exists on newer jax; omit it where absent."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -26,6 +31,5 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **_axis_kwargs(2))

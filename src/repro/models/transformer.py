@@ -288,8 +288,12 @@ def decode_step(params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
                 lambda c, u, p: jax.lax.dynamic_update_slice(
                     c, u, (p, jnp.int32(0), jnp.int32(0))))(
                 cache, new, positions_)
-        onehot = (kv_pos == positions_[:, None]).astype(cfg.jdtype)
-        return cache + onehot[:, :, None, None] * new
+        # overwrite, not add: a slot may rewrite a position (e.g. the serve
+        # engine steps idle slots during another slot's prefill), and the
+        # scatter path below overwrites — the two must stay equivalent
+        onehot = (kv_pos == positions_[:, None]).astype(cfg.jdtype)[
+            :, :, None, None]
+        return cache * (1 - onehot) + onehot * new
 
     def body(carry, inp):
         x, = carry

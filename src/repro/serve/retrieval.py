@@ -23,6 +23,16 @@ import jax
 import jax.numpy as jnp
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map across versions (older jax: experimental, check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def _merge_topk(scores, ids, new_scores, new_ids, k):
     s = jnp.concatenate([scores, new_scores], axis=-1)
     i = jnp.concatenate([ids, new_ids], axis=-1)
@@ -156,13 +166,12 @@ def streak_topk_sharded(state, items_sorted, item_order, bounds,
         top_i = jnp.take_along_axis(all_i.reshape(b, -1), pos, axis=-1)
         return top_s, top_i, jax.lax.pmax(bi, axis)
 
-    # check_vma off: outputs ARE replicated (all_gather + deterministic
-    # top_k) but the varying-axis inference cannot prove it
-    return jax.shard_map(
+    # replication checks off: outputs ARE replicated (all_gather +
+    # deterministic top_k) but the varying-axis inference cannot prove it
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axis, None), P(axis), P(axis)),
-        out_specs=(P(), P(), P()),
-        check_vma=False)(state, items_sorted, item_order, bounds)
+        out_specs=(P(), P(), P()))(state, items_sorted, item_order, bounds)
 
 
 def blocked_topk_sharded(state, items, mesh, axis: str = "model",
@@ -190,8 +199,7 @@ def blocked_topk_sharded(state, items, mesh, axis: str = "model",
         top_i = jnp.take_along_axis(all_i.reshape(b, -1), pos, axis=-1)
         return top_s, top_i
 
-    return jax.shard_map(
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axis, None), P(axis)),
-        out_specs=(P(), P()),
-        check_vma=False)(state, items, base)
+        out_specs=(P(), P()))(state, items, base)

@@ -1,0 +1,134 @@
+"""Minimal random-sampling stand-in for `hypothesis`.
+
+The property tests only need a small strategy surface (integers, lists,
+tuples, composite, data). When the real `hypothesis` package is installed
+(CI installs it from requirements-dev.txt) this module is never imported;
+without it, tests/conftest.py registers this module under the `hypothesis`
+name so the suite still collects and the properties are checked against
+`max_examples` random samples (no shrinking, no database — a smoke-grade
+substitute, not a replacement).
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+import zlib
+
+
+class Strategy:
+    """A sampler: strategy.sample(rng) -> value."""
+
+    def __init__(self, sample_fn, name="strategy"):
+        self._sample_fn = sample_fn
+        self._name = name
+
+    def sample(self, rng: random.Random):
+        return self._sample_fn(rng)
+
+    def example(self):
+        return self.sample(random.Random(0))
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"<fallback {self._name}>"
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value), "integers")
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value), "floats")
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))],
+                    "sampled_from")
+
+
+def lists(elements: Strategy, min_size=0, max_size=10):
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+    return Strategy(sample, "lists")
+
+
+def tuples(*strats: Strategy):
+    return Strategy(lambda rng: tuple(s.sample(rng) for s in strats),
+                    "tuples")
+
+
+class _DataObject:
+    """Interactive draws inside a test body (st.data())."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label=None):
+        return strategy.sample(self._rng)
+
+
+def data():
+    return Strategy(lambda rng: _DataObject(rng), "data")
+
+
+def composite(fn):
+    """@st.composite def s(draw, ...): ... -> callable returning a Strategy."""
+    def builder(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+        return Strategy(sample, f"composite:{fn.__name__}")
+    builder.__name__ = fn.__name__
+    return builder
+
+
+def settings(**kwargs):
+    """Records max_examples on the function; other knobs are ignored."""
+    def deco(fn):
+        fn._fallback_settings = dict(kwargs)
+        return fn
+    return deco
+
+
+def given(*strats: Strategy, **kwstrats: Strategy):
+    """Run the test `max_examples` times with freshly sampled arguments.
+
+    The wrapper exposes a zero-parameter signature so pytest does not
+    mistake strategy-supplied arguments for fixtures.
+    """
+    def deco(fn):
+        def wrapper():
+            cfg = getattr(fn, "_fallback_settings", None) or \
+                getattr(wrapper, "_fallback_settings", None) or {}
+            n = int(cfg.get("max_examples", 100))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                args = [s.sample(rng) for s in strats]
+                kwargs = {k: s.sample(rng) for k, s in kwstrats.items()}
+                fn(*args, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature([])
+        return wrapper
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Build module objects mimicking `hypothesis` / `hypothesis.strategies`."""
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples", "data", "composite"):
+        setattr(st_mod, name, globals()[name])
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__fallback__ = True
+    return hyp_mod

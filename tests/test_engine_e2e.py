@@ -119,3 +119,44 @@ def test_kernel_backend_equivalent(lgd):
     got, _, _ = StreakEngine(lgd.store,
                              ExecConfig(join_backend="kernel")).execute(q)
     _scores_match(ref, got)
+
+
+@pytest.mark.parametrize("qi", range(8))
+def test_fused_backend_equivalent_lgd(lgd, qi):
+    """The streaming fused backend must return the same top-k multiset."""
+    q = lgd.queries[qi]
+    ref, _, _ = StreakEngine(lgd.store).execute(q)
+    got, _, st = StreakEngine(
+        lgd.store,
+        ExecConfig(join_backend="fused", fused_batch_cols=256)).execute(q)
+    _scores_match(ref, got)
+
+
+@pytest.mark.parametrize("qi", [0, 3, 6])
+def test_fused_backend_equivalent_yago(yago, qi):
+    q = yago.queries[qi]
+    ref, _, _ = StreakEngine(yago.store).execute(q)
+    got, _, _ = StreakEngine(
+        yago.store, ExecConfig(join_backend="fused")).execute(q)
+    _scores_match(ref, got)
+
+
+def test_fused_backend_quickstart_bit_identical():
+    """Acceptance: same ids, same scores as the numpy backend on the
+    examples/quickstart.py workload (tiny batch size forces several
+    θ-consuming batches per block)."""
+    import importlib.util
+    import pathlib
+    spec = importlib.util.spec_from_file_location(
+        "quickstart", pathlib.Path(__file__).resolve().parents[1]
+        / "examples" / "quickstart.py")
+    qs = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(qs)
+    store, q = qs.build_demo()
+    s1, r1, _ = StreakEngine(store, ExecConfig(block=16)).execute(q)
+    s2, r2, _ = StreakEngine(
+        store, ExecConfig(block=16, join_backend="fused",
+                          fused_batch_cols=8)).execute(q)
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+    np.testing.assert_array_equal(r1["region"], r2["region"])
+    np.testing.assert_array_equal(r1["river"], r2["river"])

@@ -8,6 +8,7 @@ from repro.kernels import block_scan as bs
 from repro.kernels import bloom_probe as bp
 from repro.kernels import distance_join as dj
 from repro.kernels import flash_attention as fa
+from repro.kernels import fused_topk_join as ftj
 from repro.kernels import morton_kernel as mk
 from repro.kernels import ops, ref
 
@@ -39,6 +40,140 @@ def test_distance_join_agrees_with_engine_geometry():
     got = dj.distance_join(jnp.asarray(a), jnp.asarray(b),
                            bm=64, bn=64, interpret=True)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------- fused top-k join -----
+def _fused_case(m, n, k, theta, dist, seed=11, bm=128, bn=128):
+    rng = np.random.default_rng(seed)
+    a, b = _boxes(rng, m), _boxes(rng, n)
+    dk = rng.random(m).astype(np.float32)
+    vk = rng.random(n).astype(np.float32)
+    got = ftj.fused_topk_join(jnp.asarray(a), jnp.asarray(b),
+                              jnp.asarray(dk), jnp.asarray(vk),
+                              dist, theta, k=k, bm=bm, bn=bn, interpret=True)
+    want = ref.fused_topk_join_ref(jnp.asarray(a), jnp.asarray(b),
+                                   jnp.asarray(dk), jnp.asarray(vk),
+                                   dist, theta, k)
+    return [np.asarray(x) for x in got], [np.asarray(x) for x in want]
+
+
+@pytest.mark.parametrize("m,n", [(8, 8), (100, 260), (256, 256), (300, 513)])
+def test_fused_topk_join_matches_ref_tile_boundaries(m, n):
+    """M, N not multiples of bm/bn: padding must never surface."""
+    (gs, gi, gc), (ws, wi, wc) = _fused_case(m, n, k=8, theta=-np.inf,
+                                             dist=0.15)
+    np.testing.assert_array_equal(gc, wc)
+    np.testing.assert_allclose(gs, ws, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(gi, wi)
+
+
+def test_fused_topk_join_k_exceeds_survivors():
+    """k wider than any row's survivor set: -inf/-1 padding, exact counts."""
+    (gs, gi, gc), (ws, wi, wc) = _fused_case(64, 64, k=200, theta=-np.inf,
+                                             dist=0.1)
+    assert gc.max() < 200              # nothing overflows a 200-wide partial
+    np.testing.assert_array_equal(gc, wc)
+    np.testing.assert_array_equal(gi, wi)
+    padded = gs == -np.inf
+    assert (gi[padded] == -1).all()
+    # every row's populated prefix length equals its survivor count
+    np.testing.assert_array_equal((~padded).sum(axis=1), gc)
+
+
+@pytest.mark.parametrize("theta", [-np.inf, 0.9, 1.6, np.inf])
+def test_fused_topk_join_theta_prunes(theta):
+    """θ = -inf keeps every in-distance pair; tighter θ only removes."""
+    (gs, gi, gc), (ws, wi, wc) = _fused_case(100, 150, k=16, theta=theta,
+                                             dist=0.2)
+    np.testing.assert_array_equal(gc, wc)
+    np.testing.assert_allclose(gs, ws, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(gi, wi)
+    if theta == np.inf:
+        assert gc.sum() == 0 and (gi == -1).all()
+    finite = gs[gs > -np.inf]
+    assert (finite > theta).all() if np.isfinite(theta) else True
+
+
+def test_fused_counts_signal_overflow_exactly():
+    """counts > k marks rows whose survivors exceed the partial width."""
+    (gs, gi, gc), (_, _, wc) = _fused_case(60, 500, k=4, theta=-np.inf,
+                                           dist=0.5)
+    np.testing.assert_array_equal(gc, wc)
+    assert (gc > 4).any()              # wide dist: overflow must occur
+    # even overflowed rows report their k best pairs correctly
+    rng = np.random.default_rng(11)
+    a, b = _boxes(rng, 60), _boxes(rng, 500)
+    dk = rng.random(60).astype(np.float32)
+    vk = rng.random(500).astype(np.float32)
+    d = np.asarray(ref.distance_join_ref(jnp.asarray(a), jnp.asarray(b)))
+    bound = np.where(d <= 0.5, dk[:, None] + vk[None, :], -np.inf)
+    want_best = -np.sort(-bound, axis=1)[:, :4]
+    np.testing.assert_allclose(gs, want_best, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_stream_join_pairs_equal_dense_backends():
+    """fused backend candidate pairs == numpy backend == kernel backend."""
+    from repro.core import spatial_join
+    rng = np.random.default_rng(12)
+    a, b = _boxes(rng, 90), _boxes(rng, 333)
+    for dist in (0.02, 0.15):
+        ref_pairs = spatial_join.mbr_distance_join(
+            a.astype(np.float64), b.astype(np.float64), dist, "numpy")
+        krn_pairs = spatial_join.mbr_distance_join(
+            a.astype(np.float64), b.astype(np.float64), dist, "kernel")
+        fus_pairs = spatial_join.mbr_distance_join(
+            a.astype(np.float64), b.astype(np.float64), dist, "fused")
+        np.testing.assert_array_equal(ref_pairs[0], krn_pairs[0])
+        np.testing.assert_array_equal(ref_pairs[1], krn_pairs[1])
+        np.testing.assert_array_equal(ref_pairs[0], fus_pairs[0])
+        np.testing.assert_array_equal(ref_pairs[1], fus_pairs[1])
+
+
+def test_fused_stream_join_theta_tightening_only_prunes():
+    """A θ that tightens between batches must never drop a winning pair."""
+    from repro.core import spatial_join
+    from repro.core.topk import TopK
+    from repro.core.join import Relation
+    rng = np.random.default_rng(13)
+    m, n, k = 80, 400, 10
+    a, b = _boxes(rng, m), _boxes(rng, n)
+    dk = rng.random(m); vk = rng.random(n)
+    dist = 0.3
+    # oracle: global top-k pair bounds among in-distance pairs
+    d = np.asarray(ref.distance_join_ref(jnp.asarray(a), jnp.asarray(b)))
+    bound = np.where(d <= dist, dk[:, None] + vk[None, :], -np.inf)
+    want = np.sort(bound.ravel())[::-1][:k]
+    tk = TopK(k=k)
+    for pi, pj in spatial_join.fused_stream_join(
+            a.astype(np.float64), b.astype(np.float64), dk, vk, dist, k=k,
+            theta_fn=lambda: tk.theta, batch_cols=64):
+        s = dk[pi] + vk[pj]
+        tk.push(s, Relation({"i": pi, "j": pj}))
+    got, _ = tk.results()
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_fused_topk_pairs_two_level_merge_matches_dense():
+    """Batch partials merged via topk.merge_row_partials == dense row top-k."""
+    from repro.core import spatial_join
+    rng = np.random.default_rng(14)
+    m, n, k = 70, 300, 6
+    a, b = _boxes(rng, m), _boxes(rng, n)
+    dk = rng.random(m); vk = rng.random(n)
+    dist = 0.25
+    gs, gi = spatial_join.fused_topk_pairs(
+        a.astype(np.float64), b.astype(np.float64), dk, vk, dist, k=k,
+        batch_cols=48)
+    d = np.asarray(ref.distance_join_ref(jnp.asarray(a), jnp.asarray(b)))
+    bound = np.where(
+        d <= dist,
+        dk.astype(np.float32)[:, None] + vk.astype(np.float32)[None, :],
+        -np.inf)
+    want = -np.sort(-bound, axis=1)[:, :k]
+    np.testing.assert_allclose(gs, want, rtol=1e-6, atol=1e-6)
+    rows = np.arange(m)[:, None]
+    picked = np.where(gi >= 0, bound[rows, np.maximum(gi, 0)], -np.inf)
+    np.testing.assert_allclose(picked, want, rtol=1e-6, atol=1e-6)
 
 
 # ------------------------------------------------------------ bloom probe ---

@@ -79,6 +79,39 @@ def test_filter_in_ranges_matches_set_semantics(vals, ranges):
     assert sorted(got["e"].tolist()) == sorted(want)
 
 
+@given(st.integers(1, 40), st.integers(1, 80), st.integers(1, 8),
+       st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_fused_join_equivalent_to_matrix_and_numpy(m, n, k, seed):
+    """fused backend ≡ kernel backend ≡ numpy backend candidate pairs, and
+    the streaming per-row partials match the dense row-wise top-k."""
+    from repro.core import spatial_join
+    rng = np.random.default_rng(seed)
+    pts_a = rng.random((m, 2))
+    pts_b = rng.random((n, 2))
+    a = np.concatenate([pts_a, pts_a + rng.random((m, 2)) * 0.05], axis=1)
+    b = np.concatenate([pts_b, pts_b + rng.random((n, 2)) * 0.05], axis=1)
+    dist = float(rng.uniform(0.01, 0.3))
+    ref_i, ref_j = spatial_join.mbr_distance_join(a, b, dist, "numpy")
+    for backend in ("kernel", "fused"):
+        gi, gj = spatial_join.mbr_distance_join(a, b, dist, backend)
+        assert gi.tolist() == ref_i.tolist(), backend
+        assert gj.tolist() == ref_j.tolist(), backend
+    # per-row partials against the dense oracle
+    dk = rng.random(m).astype(np.float32)
+    vk = rng.random(n).astype(np.float32)
+    gs, gidx = spatial_join.fused_topk_pairs(a, b, dk, vk, dist, k=k,
+                                             batch_cols=32)
+    from repro.core import geometry
+    d = geometry.box_min_dist(a[:, None, :], b[None, :, :])
+    bound = np.where(d <= dist, dk[:, None] + vk[None, :], -np.inf)
+    want = -np.sort(-bound.astype(np.float32), axis=1)[:, :min(k, n)]
+    if want.shape[1] < k:
+        want = np.pad(want, ((0, 0), (0, k - want.shape[1])),
+                      constant_values=-np.inf)
+    np.testing.assert_allclose(gs, want, rtol=1e-6, atol=1e-6)
+
+
 @given(st.integers(10, 200), st.integers(1, 20), st.integers(0, 5))
 @settings(max_examples=30, deadline=None)
 def test_topk_threshold_monotone(n, k, seed):

@@ -53,11 +53,15 @@ def test_trainer_loss_decreases_and_resumes(tmp_path):
 
     tcfg = loop.TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=5,
                               log_every=100)
-    tr = loop.Trainer(loss_fn, params, tcfg)
+    # schedule sized to the 30-step smoke run (the default 100-step warmup
+    # would leave the lr near zero for the whole test)
+    ocfg = optim.AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=60,
+                             weight_decay=0.0)
+    tr = loop.Trainer(loss_fn, params, tcfg, opt_cfg=ocfg)
     hist = tr.fit(lambda s: (jnp.asarray(stream.batch(s)),), n_steps=30)
     assert np.mean(hist[:5]) > np.mean(hist[-5:])  # it learns
     # resume from checkpoint: a new trainer continues at saved step
-    tr2 = loop.Trainer(loss_fn, params, tcfg)
+    tr2 = loop.Trainer(loss_fn, params, tcfg, opt_cfg=ocfg)
     assert tr2.maybe_restore()
     assert tr2.step == 30
 
@@ -114,8 +118,8 @@ def test_elastic_shrink_and_reshard():
     n = len(jax.devices())
     if n < 2:
         pytest.skip("needs >= 2 devices")
-    mesh = jax.make_mesh((n // 1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(data=n, model=1)
     x = jax.device_put(jnp.arange(n * 4.0).reshape(n, 4),
                        NamedSharding(mesh, P("data", None)))
     new_mesh = elastic.shrink_mesh(mesh, n_lost=1, model_axis="model")
@@ -127,10 +131,8 @@ def test_elastic_shrink_and_reshard():
 def test_elastic_respec_folds_pod_axis():
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
     dev = np.array(jax.devices()[:1]).reshape(1, 1)
-    new_mesh = Mesh(dev, ("data", "model"),
-                    axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    old_mesh = Mesh(dev.reshape(1, 1, 1), ("pod", "data", "model"),
-                    axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    new_mesh = Mesh(dev, ("data", "model"))
+    old_mesh = Mesh(dev.reshape(1, 1, 1), ("pod", "data", "model"))
     s = NamedSharding(old_mesh, P(("pod", "data"), None))
     ns = elastic.respec(s, new_mesh)
     assert ns.spec == P(("data",), None)
