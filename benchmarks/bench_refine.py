@@ -1,0 +1,64 @@
+"""Refinement: per-pair python loop vs bucketed kernel over the CSR pool.
+
+§3.2.4 exact-geometry validation is refinement-bound once the index has
+pruned well (Geographica-style polyline/polygon workloads): the pre-pool
+implementation looped candidate pairs in python, one (m, 2) x (n, 2)
+broadcast each. The bucketed path gathers pairs by padded size class from
+the CSR geometry pool and computes each bucket in one kernel call
+(kernels/geom_refine.py). Rows sweep candidate-pair count and
+points-per-geometry for both metrics; `speedup=` records looped / bucketed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import spatial_join
+from repro.core.store import GeomPool
+
+from . import common
+
+
+def _pool(rng, n_entities: int, pts_per_geom: int, lonlat: bool) -> GeomPool:
+    counts = rng.integers(max(1, pts_per_geom // 2),
+                          2 * pts_per_geom, size=n_entities)
+    lo, hi = ((-179.0, 179.0) if lonlat else (0.0, 100.0))
+    return GeomPool.from_lists(
+        [np.stack([rng.uniform(lo, hi, c), rng.uniform(lo / 2, hi / 2, c)],
+                  axis=-1) for c in counts])
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for metric in ("euclid", "haversine"):
+        for n_pairs, pts_per_geom in ((2000, 4), (10000, 32), (10000, 96),
+                                      (30000, 32)):
+            pool = _pool(rng, max(n_pairs // 8, 32), pts_per_geom,
+                         lonlat=(metric == "haversine"))
+            n_ent = pool.n_entities
+            ra = rng.integers(0, n_ent, n_pairs).astype(np.int64)
+            rb = rng.integers(0, n_ent, n_pairs).astype(np.int64)
+            off = pool.offsets
+            geo_a = [np.asarray(pool.points[off[r]:off[r + 1]], np.float64)
+                     for r in ra]
+            geo_b = [np.asarray(pool.points[off[r]:off[r + 1]], np.float64)
+                     for r in rb]
+
+            def run_looped():
+                return spatial_join.exact_pair_distance_looped(
+                    geo_a, geo_b, metric)
+
+            def run_bucketed():
+                return spatial_join.pool_min_dist(pool, ra, rb, metric)
+
+            # both paths must agree before being timed
+            np.testing.assert_allclose(run_bucketed(), run_looped(),
+                                       rtol=1e-4, atol=1e-4)
+            t_loop = common.timeit(run_looped)
+            t_buck = common.timeit(run_bucketed)
+            tag = f"refine/{metric}_pairs{n_pairs}_pts{pts_per_geom}"
+            rows.append(common.row(f"{tag}_looped", t_loop, ""))
+            rows.append(common.row(
+                f"{tag}_bucketed", t_buck,
+                f"speedup={t_loop / t_buck:.2f}x"))
+    return rows

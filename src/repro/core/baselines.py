@@ -71,7 +71,8 @@ class FullScanEngine:
         pi, pj = radius_join(ca, cb, plan.dist_norm + slack)
         stats.pairs_checked = len(pi)
         keep = spatial_join.refine(
-            pi, pj, store.exact_geometry(ua[pi]), store.exact_geometry(ub[pj]),
+            pi, pj, store.geom_pool,
+            store.geom_rows(ua[pi]), store.geom_rows(ub[pj]),
             plan.dist_world, plan.metric)
         pi, pj = pi[keep], pj[keep]
         stats.candidates = len(pi)

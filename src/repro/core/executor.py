@@ -29,6 +29,7 @@ class ExecConfig:
     force_driver: str | None = None     # "a" | "b" | None
     join_backend: str = "numpy"         # "numpy" | "kernel" | "fused"
     fused_batch_cols: int = 4096        # driven columns per fused-kernel call
+    refine_chunk: int = 1024            # candidate pairs refined per θ check
     mbr_join_fn: object = None          # override Phase-3 MBR join (baselines)
     select_params: node_select.SelectParams = dataclasses.field(
         default_factory=node_select.SelectParams)
@@ -139,30 +140,58 @@ class StreakEngine:
                     uniq_ents: np.ndarray, dvn_ents: np.ndarray,
                     drv_rel: Relation, dvn_rel: Relation,
                     driver: SidePlan, driven: SidePlan, plan: QueryPlan,
-                    topk: TopK, stats: ExecStats) -> None:
-        """Refine candidate pairs, join the relations back, score, push."""
+                    topk: TopK, stats: ExecStats,
+                    ds: np.ndarray | None = None,
+                    vs: np.ndarray | None = None) -> None:
+        """θ-aware refinement: order pairs by key bound, refine in chunks.
+
+        Candidate pairs are sorted by descending score-key bound
+        ``ds[i] + vs[j]`` (an upper bound on any result row the pair can
+        produce, see `_entity_key_bound`), refined chunk-wise against the
+        exact geometry pool, and survivors are scored and pushed into the
+        top-k *between* chunks — so once the best remaining bound cannot
+        beat θ, the whole tail of candidate pairs is skipped without ever
+        touching its geometry (the paper's early termination applied to the
+        refinement stage itself).
+        """
         if len(pi) == 0:
             return
         store = self.store
-        keep = spatial_join.refine(
-            pi, pj,
-            store.exact_geometry(uniq_ents[pi]),
-            store.exact_geometry(dvn_ents[pj]),
-            plan.dist_world, plan.metric, stats.join)
-        pi, pj = pi[keep], pj[keep]
-        if len(pi) == 0:
-            return
-        pair_rel = Relation({driver.entity_var: uniq_ents[pi],
-                             driven.entity_var: dvn_ents[pj]})
-        out = join(drv_rel, pair_rel)
-        out = join(out, dvn_rel)
-        if out.n == 0:
-            return
-        keys = self._score_key(out, plan)
-        valid = ~np.isnan(keys)
-        out, keys = out.take(np.flatnonzero(valid)), keys[valid]
-        stats.results_considered += out.n
-        topk.push(keys, out)
+        if ds is None:
+            ds = self._entity_key_bound(drv_rel, uniq_ents, driver, plan)
+        if vs is None:
+            vs = self._entity_key_bound(dvn_rel, dvn_ents, driven, plan)
+        bounds = ds[pi] + vs[pj]
+        order = np.argsort(-bounds, kind="stable")
+        pi, pj, bounds = pi[order], pj[order], bounds[order]
+        # resolve pool rows once per unique entity, gather per pair
+        rows_a = store.geom_rows(uniq_ents)[pi]
+        rows_b = store.geom_rows(dvn_ents)[pj]
+        chunk = max(int(self.config.refine_chunk), 1)
+        for start in range(0, len(pi), chunk):
+            # bounds are sorted: bounds[start] caps every remaining pair
+            if topk.full and bounds[start] <= topk.theta:
+                stats.join.refine_skipped += len(pi) - start
+                break
+            end = min(start + chunk, len(pi))
+            keep = spatial_join.refine(
+                pi[start:end], pj[start:end], store.geom_pool,
+                rows_a[start:end], rows_b[start:end],
+                plan.dist_world, plan.metric, stats.join)
+            ci, cj = pi[start:end][keep], pj[start:end][keep]
+            if len(ci) == 0:
+                continue
+            pair_rel = Relation({driver.entity_var: uniq_ents[ci],
+                                 driven.entity_var: dvn_ents[cj]})
+            out = join(drv_rel, pair_rel)
+            out = join(out, dvn_rel)
+            if out.n == 0:
+                continue
+            keys = self._score_key(out, plan)
+            valid = ~np.isnan(keys)
+            out, keys = out.take(np.flatnonzero(valid)), keys[valid]
+            stats.results_considered += out.n
+            topk.push(keys, out)
 
     # ------------------------------------------------------------------
     def execute(self, q: Query) -> tuple[np.ndarray, Relation, ExecStats]:
@@ -262,7 +291,7 @@ class StreakEngine:
                         batch_cols=cfg.fused_batch_cols, stats=stats.join):
                     self._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
                                      dvn_rel, driver, driven, plan, topk,
-                                     stats)
+                                     stats, ds=ds, vs=vs)
             else:
                 join_fn = cfg.mbr_join_fn or spatial_join.mbr_distance_join
                 pi, pj = join_fn(boxes, dvn_boxes, plan.dist_norm,
@@ -278,7 +307,10 @@ class StreakEngine:
     def _driven_full(self, driven: SidePlan) -> Relation:
         """Fully-joined driven sub-query, cached per query (S-Plan is a
         full scan per the paper; only the SIP filter varies per block)."""
-        key = ("__driven_full",) + tuple(id(tp) for tp in driven.all_ordered)
+        # key on the pattern *contents*: id(tp) can collide after pattern
+        # objects are garbage-collected, silently reusing a stale relation
+        key = ("__driven_full",) + tuple((tp.g, tp.s, tp.p, tp.o)
+                                         for tp in driven.all_ordered)
         if key not in self._scan_cache:
             rel = self._cached_scan(driven.all_ordered[0])
             rel = self._join_chain(rel, driven.all_ordered[1:])

@@ -30,9 +30,10 @@ from . import geometry, topk as topk_mod
 
 @dataclasses.dataclass
 class JoinStats:
-    candidates: int = 0     # MBR-level candidate pairs emitted
-    refined: int = 0        # pairs surviving exact refinement
-    pairs_tested: int = 0   # full MBR pairs evaluated (block product)
+    candidates: int = 0       # MBR-level candidate pairs emitted
+    refined: int = 0          # pairs surviving exact refinement
+    pairs_tested: int = 0     # full MBR pairs evaluated (block product)
+    refine_skipped: int = 0   # candidate pairs never refined (θ-aware skip)
 
 
 def mbr_distance_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
@@ -222,14 +223,144 @@ def fused_topk_pairs(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
     return topk_mod.merge_row_partials(parts, kcap)
 
 
-def refine(pairs_i: np.ndarray, pairs_j: np.ndarray,
-           driver_geom: list, driven_geom: list,
-           dist_world: float, metric: str = "euclid",
-           stats: JoinStats | None = None) -> np.ndarray:
-    """Exact-representation distance validation (paper §3.2.4).
+# ---------------------------------------------------------------------------
+# Exact-geometry refinement on the CSR pool (paper §3.2.4), bucketed kernel
+# ---------------------------------------------------------------------------
 
-    driver_geom / driven_geom are per-candidate exact geometries: (m, 2) point
-    arrays (points, polylines, polygon rings). Returns a boolean keep mask.
+REFINE_MAX_PTS = 128        # size-class cap; larger geometries are fragmented
+
+
+def _size_class(n: np.ndarray) -> np.ndarray:
+    """Next power of two >= n (n in [1, REFINE_MAX_PTS])."""
+    return (1 << np.ceil(np.log2(np.maximum(n, 1))).astype(np.int64)) \
+        .astype(np.int64)
+
+
+def core_to_dist(core: np.ndarray, metric: str) -> np.ndarray:
+    """Metric *core* minima -> distances, in float64 numpy.
+
+    The bucketed kernel reduces the metric core — squared euclid distance,
+    or squared unit-sphere chord (= 4·haversine-h) — both monotone in the
+    true distance, so the transform commutes with the min and runs once per
+    pair here, in f64 numpy because XLA's jitted ``asin`` is not exact at 0
+    (a self-distance would come back as ~3e-4 km).
+    """
+    core = np.asarray(core, dtype=np.float64)
+    if metric == "haversine":
+        return (2.0 * geometry.EARTH_RADIUS_KM
+                * np.arcsin(np.clip(np.sqrt(core) * 0.5, 0.0, 1.0)))
+    return np.sqrt(core)
+
+
+def pool_min_dist(pool, rows_a: np.ndarray, rows_b: np.ndarray,
+                  metric: str = "euclid", interpret: bool | None = None,
+                  max_pts: int = REFINE_MAX_PTS) -> np.ndarray:
+    """Exact min distance per (rows_a[t], rows_b[t]) geometry-pool row pair.
+
+    Vectorized replacement for the per-pair python loop: pairs are grouped by
+    padded (m_pad, n_pad) size class (next power of two per side), each
+    bucket is gathered from the CSR pool's coordinate planes — raw x/y for
+    euclid, unit-sphere X/Y/Z for haversine (chord² = 4h, trig hoisted to
+    pool build) — into dense (B, m_pad) / (B, n_pad) tiles, padding
+    replicating the entity's last point (which can never change a min), and
+    one kernel call per bucket computes the pairwise minima
+    (kernels/geom_refine.py; jnp oracle on CPU). Geometries wider than
+    `max_pts` are fragmented into <= max_pts chunks on both sides (min
+    distance decomposes over point subsets) and min-scattered back.
+    Returns (n_pairs,) float64 distances (f32 cores, f64 final transform).
+    """
+    from ..kernels import ops as kops
+
+    npairs = len(rows_a)
+    out = np.full(npairs, np.inf, dtype=np.float32)
+    if npairs == 0:
+        return out
+    rows_a = np.asarray(rows_a, dtype=np.int64)
+    rows_b = np.asarray(rows_b, dtype=np.int64)
+    off = pool.offsets
+    cnt_a, cnt_b = pool.counts(rows_a), pool.counts(rows_b)
+    na, nb = -(-cnt_a // max_pts), -(-cnt_b // max_pts)
+    frags = na * nb
+    if int(frags.max()) == 1:           # common case: no fragmentation
+        pair_idx = np.arange(npairs, dtype=np.int64)
+        start_a, len_a = off[rows_a], cnt_a
+        start_b, len_b = off[rows_b], cnt_b
+    else:
+        pair_idx = np.repeat(np.arange(npairs, dtype=np.int64), frags)
+        base = np.repeat(np.cumsum(frags) - frags, frags)
+        local = np.arange(int(frags.sum()), dtype=np.int64) - base
+        nb_r = nb[pair_idx]
+        ca, cb = local // nb_r, local % nb_r
+        start_a = off[rows_a][pair_idx] + ca * max_pts
+        len_a = np.minimum(cnt_a[pair_idx] - ca * max_pts, max_pts)
+        start_b = off[rows_b][pair_idx] + cb * max_pts
+        len_b = np.minimum(cnt_b[pair_idx] - cb * max_pts, max_pts)
+    cls_a, cls_b = _size_class(len_a), _size_class(len_b)
+    planes = pool.planes3d() if metric == "haversine" else pool.planes2d()
+    key = cls_a * (2 * max_pts) + cls_b
+    for kk in np.unique(key):
+        sel = np.flatnonzero(key == kk)
+        m_pad, n_pad = int(cls_a[sel[0]]), int(cls_b[sel[0]])
+        # pad the batch axis to a bounded shape family too: bucket sizes
+        # are data-dependent, and unpadded they would jit-compile a fresh
+        # kernel per distinct size. Rounding up at 3-significant-bit
+        # granularity keeps <= 8 shapes per power of two and <= ~14% pad
+        # waste. Padding replays the first fragment — min-scatter is
+        # idempotent, so duplicates are harmless.
+        blen = len(sel)
+        g = 64 if blen <= 64 else 1 << max(6, blen.bit_length() - 3)
+        bpad = -(-blen // g) * g
+        sel = np.concatenate([sel, np.full(bpad - blen, sel[0],
+                                           dtype=np.int64)])
+        # clamped gather: index min(arange, len-1) replicates the last point
+        ia = start_a[sel, None] + np.minimum(np.arange(m_pad)[None, :],
+                                             (len_a[sel] - 1)[:, None])
+        ib = start_b[sel, None] + np.minimum(np.arange(n_pad)[None, :],
+                                             (len_b[sel] - 1)[:, None])
+        c = np.asarray(kops.bucketed_min_core(
+            tuple(p[ia] for p in planes), tuple(p[ib] for p in planes),
+            interpret=interpret))
+        np.minimum.at(out, pair_idx[sel], c)
+    return core_to_dist(out, metric)
+
+
+def refine(pairs_i: np.ndarray, pairs_j: np.ndarray,
+           pool, rows_a: np.ndarray, rows_b: np.ndarray,
+           dist_world: float, metric: str = "euclid",
+           stats: JoinStats | None = None,
+           interpret: bool | None = None) -> np.ndarray:
+    """Exact-representation distance validation (paper §3.2.4), vectorized.
+
+    rows_a / rows_b are geometry-pool rows per candidate pair (from
+    ``store.geom_rows(ents[pairs_i])`` etc.). Returns a boolean keep mask;
+    `refine_looped` is the per-pair oracle this must agree with.
+    """
+    d = pool_min_dist(pool, rows_a, rows_b, metric, interpret)
+    # f64 compare: the threshold stays un-rounded (a f32-rounded threshold
+    # could drop true survivors)
+    keep = d <= float(dist_world)
+    if stats is not None:
+        stats.refined += int(keep.sum())
+    return keep
+
+
+def exact_pair_distance(pool, rows_a: np.ndarray, rows_b: np.ndarray,
+                        metric: str = "euclid",
+                        interpret: bool | None = None) -> np.ndarray:
+    """Exact min distance per candidate pair, on the bucketed kernel path
+    (shared by the engine's refinement and the baselines)."""
+    return pool_min_dist(pool, rows_a, rows_b, metric, interpret)
+
+
+def refine_looped(pairs_i: np.ndarray, pairs_j: np.ndarray,
+                  driver_geom: list, driven_geom: list,
+                  dist_world: float, metric: str = "euclid",
+                  stats: JoinStats | None = None) -> np.ndarray:
+    """Per-pair refinement oracle (the pre-pool python loop, kept as the
+    specification for `refine` and the looped side of bench_refine.py).
+
+    driver_geom / driven_geom are per-candidate exact geometries: (m, 2)
+    point arrays (points, polylines, polygon rings). Returns a keep mask.
     """
     keep = np.zeros(len(pairs_i), dtype=bool)
     dist_fn = geometry.euclid_dist if metric == "euclid" else geometry.haversine_km
@@ -243,8 +374,8 @@ def refine(pairs_i: np.ndarray, pairs_j: np.ndarray,
     return keep
 
 
-def exact_pair_distance(driver_geom: list, driven_geom: list,
-                        metric: str = "euclid") -> np.ndarray:
+def exact_pair_distance_looped(driver_geom: list, driven_geom: list,
+                               metric: str = "euclid") -> np.ndarray:
     dist_fn = geometry.euclid_dist if metric == "euclid" else geometry.haversine_km
     out = np.empty(len(driver_geom))
     for n in range(len(driver_geom)):

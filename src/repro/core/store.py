@@ -120,6 +120,101 @@ def _build_numeric_index(values, subjects, objects, facts, block: int
 
 
 @dataclasses.dataclass
+class GeomPool:
+    """CSR pool of exact point-set geometries (paper §3.2.4 refinement).
+
+    One flat ``(P, 2)`` float32 point array plus ``(E+1,)`` offsets: pool row
+    ``r`` owns ``points[offsets[r] : offsets[r+1]]``. Rows ``0..n_entities-1``
+    follow ``tree.obj_ids`` order (exact geometry when ingested, denormalized
+    MBR corners otherwise) and the final row is a single-point ``(0, 0)``
+    sentinel for unknown entities — every row holds >= 1 point, so dense
+    gathers can pad by replicating a real point instead of masking.
+    """
+
+    points: np.ndarray    # (P, 2) float32
+    offsets: np.ndarray   # (E+1,) int64, offsets[0] == 0
+    # cached contiguous coordinate planes (see planes2d / planes3d)
+    _p2d: tuple | None = dataclasses.field(default=None, init=False,
+                                           repr=False, compare=False)
+    _p3d: tuple | None = dataclasses.field(default=None, init=False,
+                                           repr=False, compare=False)
+
+    @classmethod
+    def empty(cls) -> "GeomPool":
+        return cls.from_lists([])
+
+    @classmethod
+    def from_lists(cls, geoms: list) -> "GeomPool":
+        """Pack per-entity (m, 2) point arrays into CSR (one pool row per
+        entry, in order) and append the sentinel row — the one authoritative
+        encoder of the pool layout."""
+        pts = [np.asarray(g, dtype=np.float32).reshape(-1, 2) for g in geoms]
+        pts.append(np.zeros((1, 2), dtype=np.float32))      # sentinel
+        offsets = np.zeros(len(pts) + 1, dtype=np.int64)
+        offsets[1:] = np.cumsum([len(p) for p in pts])
+        return cls(np.concatenate(pts, axis=0), offsets)
+
+    @property
+    def n_entities(self) -> int:
+        """Pool rows backed by real entities (the sentinel row excluded)."""
+        return len(self.offsets) - 2
+
+    @property
+    def sentinel_row(self) -> int:
+        return self.n_entities
+
+    def counts(self, rows: np.ndarray) -> np.ndarray:
+        rows = np.asarray(rows, dtype=np.int64)
+        return self.offsets[rows + 1] - self.offsets[rows]
+
+    def planes2d(self) -> tuple:
+        """Contiguous (P,) float32 x / y planes for euclidean refinement."""
+        if self._p2d is None:
+            self._p2d = (np.ascontiguousarray(self.points[:, 0]),
+                         np.ascontiguousarray(self.points[:, 1]))
+        return self._p2d
+
+    def planes3d(self) -> tuple:
+        """Contiguous (P,) float32 unit-sphere X / Y / Z planes.
+
+        Points are (lon, lat) degrees; the chord length between unit vectors
+        relates to the haversine term by ``chord² = 4h``, so great-circle
+        refinement reduces to a squared euclidean distance in R³ — the
+        per-point trig happens once here instead of once per candidate pair
+        inside the kernel (computed in f64, stored f32).
+        """
+        if self._p3d is None:
+            lon = np.radians(self.points[:, 0].astype(np.float64))
+            lat = np.radians(self.points[:, 1].astype(np.float64))
+            cl = np.cos(lat)
+            self._p3d = ((cl * np.cos(lon)).astype(np.float32),
+                         (cl * np.sin(lon)).astype(np.float32),
+                         np.sin(lat).astype(np.float32))
+        return self._p3d
+
+    def nbytes(self) -> int:
+        return self.points.nbytes + self.offsets.nbytes
+
+
+def _build_geom_pool(tree: SQuadTree | None, exact_geoms: dict) -> GeomPool:
+    """Per-entity geometries in tree.obj_ids order, MBR-corner fallback."""
+    pts_list = []
+    if tree is not None:
+        ext = tree.extent
+        for pos in range(len(tree.obj_ids)):
+            e = int(tree.obj_ids[pos])
+            g = exact_geoms.get(e)
+            if g is None:
+                b = tree.obj_mbr[pos]
+                g = np.array([
+                    [b[0] * ext.width + ext.xmin, b[1] * ext.height + ext.ymin],
+                    [b[2] * ext.width + ext.xmin, b[3] * ext.height + ext.ymin],
+                ])
+            pts_list.append(g)
+    return GeomPool.from_lists(pts_list)
+
+
+@dataclasses.dataclass
 class QuadStore:
     quads: np.ndarray                   # (n, 4) int64 as (g, s, p, o)
     dictionary: Dictionary
@@ -130,6 +225,7 @@ class QuadStore:
     cs_catalog: dict                    # cs id -> frozenset(predicate ids)
     geometry_predicate: int = 0
     exact_geoms: dict = dataclasses.field(default_factory=dict)
+    geom_pool: GeomPool = dataclasses.field(default_factory=GeomPool.empty)
     block: int = DEFAULT_BLOCK
     # dense numeric-literal LUT for vectorized score lookups
     _num_ids: np.ndarray = dataclasses.field(
@@ -149,26 +245,29 @@ class QuadStore:
         out[hit] = self._num_vals[pos[hit]]
         return out
 
-    def exact_geometry(self, entity_ids: np.ndarray) -> list:
-        """Exact point-set geometry per entity (falls back to MBR corners)."""
-        out = []
+    def geom_rows(self, entity_ids: np.ndarray) -> np.ndarray:
+        """Entity ids -> geometry-pool rows (sentinel row when unknown)."""
+        ids = np.asarray(entity_ids, dtype=np.int64)
+        out = np.full(len(ids), self.geom_pool.sentinel_row, dtype=np.int64)
         t = self.tree
-        for e in np.asarray(entity_ids, dtype=np.int64):
-            pts = self.exact_geoms.get(int(e))
-            if pts is None:
-                pos = int(np.searchsorted(t.obj_ids, e))
-                if pos < len(t.obj_ids) and t.obj_ids[pos] == e:
-                    b = t.obj_mbr[pos]
-                    # denormalize corners back to world coordinates
-                    ext = t.extent
-                    pts = np.array([
-                        [b[0] * ext.width + ext.xmin, b[1] * ext.height + ext.ymin],
-                        [b[2] * ext.width + ext.xmin, b[3] * ext.height + ext.ymin],
-                    ])
-                else:
-                    pts = np.zeros((1, 2))
-            out.append(np.asarray(pts, dtype=np.float64))
+        if t is not None and len(t.obj_ids):
+            pos = np.searchsorted(t.obj_ids, ids)
+            pos = np.clip(pos, 0, len(t.obj_ids) - 1)
+            hit = t.obj_ids[pos] == ids
+            out[hit] = pos[hit]
         return out
+
+    def exact_geometry(self, entity_ids: np.ndarray) -> list:
+        """Exact point-set geometry per entity (falls back to MBR corners).
+
+        Compatibility view over the CSR geometry pool: each entry is a
+        float64 copy of the entity's pool run (the pool itself — see
+        :class:`GeomPool` — is what the bucketed refinement kernel consumes).
+        """
+        rows = self.geom_rows(entity_ids)
+        pts, off = self.geom_pool.points, self.geom_pool.offsets
+        return [np.asarray(pts[off[r]:off[r + 1]], dtype=np.float64)
+                for r in rows]
 
     # ------------------------------------------------------------------
     @property
@@ -184,6 +283,7 @@ class QuadStore:
             total += ni.block_max.nbytes + ni.block_min.nbytes
         if self.tree is not None:
             total += self.tree.nbytes()
+        total += self.geom_pool.nbytes()
         return total
 
     # ------------------------------------------------------------------
@@ -330,14 +430,15 @@ def build_store(quads: np.ndarray,
                 vals, rows[:, S].copy(), rows[:, O].copy(), rows[:, G].copy(),
                 block)
 
-    # remap exact geometries to spatial ids
+    # remap exact geometries to spatial ids, pack them into the CSR pool
     ex = {}
     for k, v in (exact_geoms or {}).items():
         ex[int(mapping.get(k, k))] = np.asarray(v, dtype=np.float64)
+    pool = _build_geom_pool(tree, ex)
 
     return QuadStore(quads=quads, dictionary=dictionary, indexes=indexes,
                      numeric=numeric, tree=tree, cs_of_entity=cs_of,
                      cs_catalog=catalog,
                      geometry_predicate=int(geometry_predicate),
-                     exact_geoms=ex, block=block,
+                     exact_geoms=ex, geom_pool=pool, block=block,
                      _num_ids=num_ids_sorted, _num_vals=num_vals_sorted)

@@ -17,6 +17,7 @@ from . import bloom_probe as _bp
 from . import distance_join as _dj
 from . import flash_attention as _fa
 from . import fused_topk_join as _ftj
+from . import geom_refine as _gr
 from . import morton_kernel as _mk
 from . import ref
 
@@ -64,6 +65,25 @@ def fused_topk_join(driver, driven, driver_keys, driven_keys,
 @functools.partial(jax.jit, static_argnames=("k",))
 def _fused_ref_jit(driver, driven, dk, vk, dist, theta, k):
     return ref.fused_topk_join_ref(driver, driven, dk, vk, dist, theta, k)
+
+
+def bucketed_min_core(a_planes, b_planes, interpret: bool | None = None):
+    """Per-pair exact-geometry min squared distance over one padded
+    size-class bucket; see kernels/geom_refine.py. a_planes / b_planes:
+    dims-tuples of (B, m_pad) / (B, n_pad) float32 coordinate planes whose
+    padding replicates real points (dims=2 raw x/y for euclid, dims=3
+    unit-sphere X/Y/Z for haversine). Returns (B,) float32 core minima —
+    the caller applies the metric's monotone distance transform in float64
+    (core/spatial_join.py::core_to_dist)."""
+    a_planes = tuple(jnp.asarray(p, dtype=jnp.float32) for p in a_planes)
+    b_planes = tuple(jnp.asarray(p, dtype=jnp.float32) for p in b_planes)
+    if _on_tpu() or interpret:
+        return _gr.bucketed_min_core(
+            a_planes, b_planes,
+            interpret=bool(interpret) and not _on_tpu())
+    # CPU: the loop-structured host twin (kernel numerics, no (B, m, n)
+    # cube); ref.bucketed_min_core_ref stays the test oracle
+    return _gr.bucketed_min_core_host(a_planes, b_planes)
 
 
 def bloom_probe(bits, keys, k: int = 3, interpret: bool | None = None):

@@ -55,6 +55,27 @@ def fused_topk_join_ref(driver: jnp.ndarray, driven: jnp.ndarray,
     return top_s, top_i, counts
 
 
+# ------------------------------------------- bucketed geometry refinement --
+def bucketed_min_core_ref(a_planes: tuple, b_planes: tuple) -> jnp.ndarray:
+    """Oracle for kernels/geom_refine.py: per-row min squared distance.
+
+    a_planes / b_planes: dims-tuples of (B, m_pad) / (B, n_pad) float32
+    coordinate planes; padding must replicate real points of the same
+    entity. Returns (B,) float32 minima of ``sum_d (a_d - b_d)²`` over each
+    row's point pairs — the metric *core* (squared euclid for dims=2; the
+    unit-sphere chord², i.e. 4·haversine-h, for dims=3). The core is
+    monotone in the true distance, so the caller applies the final transform
+    (sqrt; 2R·asin(√/2)) once per pair in float64 numpy — XLA's jitted
+    ``asin`` is not exact at 0, which would turn self-distances into
+    ~3e-4 km.
+    """
+    core = None
+    for ad, bd in zip(a_planes, b_planes):
+        d = ad[:, :, None] - bd[:, None, :]
+        core = d * d if core is None else core + d * d
+    return jnp.min(core, axis=(1, 2))
+
+
 # -------------------------------------------------------------- bloom probe --
 def _mix32_jnp(x, seed: int):
     x = (x + jnp.uint32(0x9E3779B9) * jnp.uint32(seed + 1)).astype(jnp.uint32)

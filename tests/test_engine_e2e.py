@@ -112,6 +112,21 @@ def test_topk_k_prefix_property(lgd):
     np.testing.assert_allclose(s10, s50[:len(s10)], rtol=1e-9)
 
 
+def test_theta_aware_refine_matches_oracle_and_skips_work(lgd):
+    """θ-aware chunked refinement: same results as the exhaustive oracle
+    while the stats show candidate pairs were skipped without refinement."""
+    skipped_total = 0
+    for qi in range(8):
+        q = lgd.queries[qi]
+        oracle, _, _ = StreakEngine(
+            lgd.store, ExecConfig(use_sip=False)).execute(q)
+        got, _, st = StreakEngine(
+            lgd.store, ExecConfig(refine_chunk=64)).execute(q)
+        _scores_match(got, oracle)
+        skipped_total += st.join.refine_skipped
+    assert skipped_total > 0
+
+
 def test_kernel_backend_equivalent(lgd):
     """The Pallas-kernel Phase-3 backend (jnp ref path on CPU) matches."""
     q = lgd.queries[0]

@@ -9,6 +9,7 @@ from repro.kernels import bloom_probe as bp
 from repro.kernels import distance_join as dj
 from repro.kernels import flash_attention as fa
 from repro.kernels import fused_topk_join as ftj
+from repro.kernels import geom_refine as gr
 from repro.kernels import morton_kernel as mk
 from repro.kernels import ops, ref
 
@@ -174,6 +175,66 @@ def test_fused_topk_pairs_two_level_merge_matches_dense():
     rows = np.arange(m)[:, None]
     picked = np.where(gi >= 0, bound[rows, np.maximum(gi, 0)], -np.inf)
     np.testing.assert_allclose(picked, want, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- bucketed geometry refine --
+def _coord_planes(rng, b, w, dims):
+    return tuple(rng.uniform(-1, 1, (b, w)).astype(np.float32)
+                 for _ in range(dims))
+
+
+@pytest.mark.parametrize("m_pad,n_pad", [(1, 1), (4, 8), (32, 32), (8, 128)])
+@pytest.mark.parametrize("dims", [2, 3])
+def test_bucketed_min_core_matches_ref(m_pad, n_pad, dims):
+    """B not a bb multiple: padded rows must never surface."""
+    rng = np.random.default_rng(20)
+    ap = _coord_planes(rng, 70, m_pad, dims)
+    bp_ = _coord_planes(rng, 70, n_pad, dims)
+    got = gr.bucketed_min_core(tuple(jnp.asarray(p) for p in ap),
+                               tuple(jnp.asarray(p) for p in bp_),
+                               bb=32, interpret=True)
+    want = ref.bucketed_min_core_ref(tuple(jnp.asarray(p) for p in ap),
+                                     tuple(jnp.asarray(p) for p in bp_))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("m_pad,n_pad", [(1, 3), (5, 8), (32, 64)])
+@pytest.mark.parametrize("dims", [2, 3])
+def test_bucketed_min_core_host_twin_matches_ref(m_pad, n_pad, dims):
+    """The CPU loop twin (the engine's dispatch target) == dense oracle."""
+    rng = np.random.default_rng(22)
+    ap = _coord_planes(rng, 53, m_pad, dims)
+    bp_ = _coord_planes(rng, 53, n_pad, dims)
+    got = gr.bucketed_min_core_host(tuple(jnp.asarray(p) for p in ap),
+                                    tuple(jnp.asarray(p) for p in bp_))
+    want = ref.bucketed_min_core_ref(tuple(jnp.asarray(p) for p in ap),
+                                     tuple(jnp.asarray(p) for p in bp_))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("metric", ["euclid", "haversine"])
+def test_bucketed_min_core_agrees_with_engine_geometry(metric):
+    """Pool planes -> kernel core -> distance ~= the f64 primitives."""
+    from repro.core import geometry, spatial_join
+    from repro.core.store import GeomPool
+    rng = np.random.default_rng(21)
+    n = 40
+    pts = np.stack([rng.uniform(-170, 170, 2 * n),
+                    rng.uniform(-85, 85, 2 * n)], axis=-1).astype(np.float32)
+    pool = GeomPool.from_lists(pts[:, None, :])   # one point per row
+    planes = (pool.planes3d() if metric == "haversine" else pool.planes2d())
+    ia = np.arange(n)[:, None]           # (n, 1): single-point geometries
+    ib = np.arange(n, 2 * n)[:, None]
+    core = np.asarray(ops.bucketed_min_core(
+        tuple(p[ia] for p in planes), tuple(p[ib] for p in planes),
+        interpret=True))
+    got = spatial_join.core_to_dist(core, metric)
+    pa, pb = pts[:n].astype(np.float64), pts[n:].astype(np.float64)
+    fn = geometry.euclid_dist if metric == "euclid" else geometry.haversine_km
+    want = fn(pa, pb)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
 # ------------------------------------------------------------ bloom probe ---

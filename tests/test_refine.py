@@ -1,0 +1,163 @@
+"""Refinement-path tests: CSR geometry pool + bucketed min-distance kernel.
+
+The per-pair python loop (`spatial_join.refine_looped` /
+`exact_pair_distance_looped`, float64) is the specification; the bucketed
+kernel path must reproduce its keep masks exactly on randomized geometries
+for both metrics, across size classes, fragmentation, single-point
+geometries, MBR-corner fallback entities, and empty pair sets.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spatial_join
+from repro.core.store import GeomPool, build_store
+from repro.core.dictionary import Dictionary
+
+
+def _rand_pool(rng, n_entities: int, max_pts: int = 9,
+               lonlat: bool = False) -> GeomPool:
+    counts = rng.integers(1, max_pts + 1, size=n_entities)
+    pts = []
+    for c in counts:
+        if lonlat:
+            p = np.stack([rng.uniform(-179, 179, c),
+                          rng.uniform(-85, 85, c)], axis=-1)
+        else:
+            p = rng.uniform(0, 100, size=(c, 2))
+        pts.append(p)
+    return GeomPool.from_lists(pts)
+
+
+def _slices(pool: GeomPool, rows: np.ndarray) -> list:
+    off = pool.offsets
+    return [np.asarray(pool.points[off[r]:off[r + 1]], dtype=np.float64)
+            for r in rows]
+
+
+def _assert_matches_looped(pool, ra, rb, metric, **kw):
+    """Bucketed distances ~= looped f64, keep masks bit-identical at
+    thresholds placed between well-separated adjacent distances."""
+    n = len(ra)
+    got = spatial_join.pool_min_dist(pool, ra, rb, metric, **kw)
+    want = spatial_join.exact_pair_distance_looped(
+        _slices(pool, ra), _slices(pool, rb), metric)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    uniq = np.unique(want)
+    mids = (uniq[:-1] + uniq[1:]) / 2.0
+    safe = mids[np.diff(uniq) > 1e-3 * (1.0 + mids)]
+    pairs = np.arange(n)
+    for dist in safe[:: max(len(safe) // 3, 1)]:
+        keep = spatial_join.refine(pairs, pairs, pool, ra, rb,
+                                   float(dist), metric)
+        keep_loop = spatial_join.refine_looped(
+            pairs, pairs, _slices(pool, ra), _slices(pool, rb),
+            float(dist), metric)
+        np.testing.assert_array_equal(keep, keep_loop)
+
+
+@given(st.integers(1, 60), st.integers(1, 40), st.integers(0, 10 ** 6),
+       st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_bucketed_refine_matches_looped_oracle(n_pairs, n_entities, seed,
+                                               haversine):
+    metric = "haversine" if haversine else "euclid"
+    rng = np.random.default_rng(seed)
+    pool = _rand_pool(rng, n_entities, lonlat=haversine)
+    ra = rng.integers(0, n_entities, n_pairs).astype(np.int64)
+    rb = rng.integers(0, n_entities, n_pairs).astype(np.int64)
+    _assert_matches_looped(pool, ra, rb, metric)
+
+
+def test_single_point_geometries():
+    """All-1-point pool: min distance is the plain point distance."""
+    rng = np.random.default_rng(3)
+    pool = _rand_pool(rng, 50, max_pts=1)
+    ra = rng.integers(0, 50, 200).astype(np.int64)
+    rb = rng.integers(0, 50, 200).astype(np.int64)
+    got = spatial_join.pool_min_dist(pool, ra, rb, "euclid")
+    pa = pool.points[pool.offsets[ra]].astype(np.float64)
+    pb = pool.points[pool.offsets[rb]].astype(np.float64)
+    want = np.sqrt(((pa - pb) ** 2).sum(axis=1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_fragmentation_of_wide_geometries():
+    """Geometries wider than max_pts are chunked on both sides and the
+    fragment minima scatter back to the true pair minimum."""
+    rng = np.random.default_rng(4)
+    pool = GeomPool.from_lists([rng.uniform(0, 100, size=(m, 2))
+                                for m in (300, 7, 130, 1, 64)])
+    ra = np.array([0, 0, 2, 4, 3], dtype=np.int64)
+    rb = np.array([1, 2, 0, 0, 3], dtype=np.int64)
+    for max_pts in (16, 128):          # multi-fragment and default paths
+        _assert_matches_looped(pool, ra, rb, "euclid", max_pts=max_pts)
+
+
+def test_empty_pair_set():
+    rng = np.random.default_rng(5)
+    pool = _rand_pool(rng, 4)
+    empty = np.empty(0, dtype=np.int64)
+    assert spatial_join.pool_min_dist(pool, empty, empty, "euclid").shape == (0,)
+    keep = spatial_join.refine(empty, empty, pool, empty, empty, 1.0, "euclid")
+    assert keep.shape == (0,) and keep.dtype == bool
+
+
+def _tiny_store(with_exact_for=("a",)):
+    """Two-entity store; entities outside `with_exact_for` fall back to
+    MBR-corner pool entries."""
+    d = Dictionary.empty()
+    T = d.intern
+    has_geom = T("hasGeometry")
+    quads, geoms, exact = [], {}, {}
+    world = {"a": (10.0, 10.0, 12.0, 14.0), "b": (30.0, 40.0, 33.0, 41.0)}
+    for name, box in world.items():
+        e = T(name)
+        quads.append((0, e, has_geom, T(f"geo:{name}")))
+        geoms[e] = box
+        if name in with_exact_for:
+            rng = np.random.default_rng(len(name))
+            exact[e] = np.stack([rng.uniform(box[0], box[2], 5),
+                                 rng.uniform(box[1], box[3], 5)], axis=-1)
+    store = build_store(np.array(quads, dtype=np.int64), d,
+                        geometry_predicate=has_geom, geometries=geoms,
+                        exact_geoms=exact, block=16, l_max=4)
+    ids = {n: store.dictionary.term_to_id[n] for n in world}
+    return store, ids, world
+
+
+def test_mbr_corner_fallback_entities():
+    """Entities without ingested exact geometry get their denormalized MBR
+    corners as the pool entry — same fallback the pre-pool code used."""
+    store, ids, world = _tiny_store(with_exact_for=("a",))
+    ea = np.array([ids["a"], ids["b"]], dtype=np.int64)
+    rows = store.geom_rows(ea)
+    cnts = store.geom_pool.counts(rows)
+    assert cnts[0] == 5 and cnts[1] == 2              # exact vs corner pair
+    (ga, gb) = store.exact_geometry(ea)
+    np.testing.assert_allclose(gb[0], world["b"][:2], atol=1e-4)
+    np.testing.assert_allclose(gb[1], world["b"][2:], atol=1e-4)
+    # refinement over a fallback entity matches the looped oracle
+    ra = store.geom_rows(np.array([ids["a"]]))
+    rb = store.geom_rows(np.array([ids["b"]]))
+    d = spatial_join.pool_min_dist(store.geom_pool, ra, rb, "euclid")
+    want = spatial_join.exact_pair_distance_looped([ga], [gb], "euclid")
+    np.testing.assert_allclose(d, want, rtol=1e-5)
+
+
+def test_unknown_entity_maps_to_sentinel():
+    store, ids, _ = _tiny_store()
+    rows = store.geom_rows(np.array([ids["a"], 10 ** 9], dtype=np.int64))
+    assert rows[1] == store.geom_pool.sentinel_row
+    geo = store.exact_geometry(np.array([10 ** 9], dtype=np.int64))
+    np.testing.assert_array_equal(geo[0], np.zeros((1, 2)))
+
+
+def test_exact_geometry_is_pool_view():
+    """The compatibility view must read back exactly the pool's points."""
+    store, ids, _ = _tiny_store(with_exact_for=("a", "b"))
+    ea = np.array([ids["a"], ids["b"]], dtype=np.int64)
+    rows = store.geom_rows(ea)
+    off = store.geom_pool.offsets
+    for g, r in zip(store.exact_geometry(ea), rows):
+        np.testing.assert_array_equal(
+            g, store.geom_pool.points[off[r]:off[r + 1]].astype(np.float64))
