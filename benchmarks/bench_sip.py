@@ -1,19 +1,110 @@
-"""Fig. 7: effect of sideways information passing + node selection.
+"""Fig. 7 + Phases 1-2: sideways information passing, looped vs batched.
 
-Per benchmark query: execution time with SIP on vs off (fixed S-Plan so the
-only difference is the I-Range/E-list filtering), plus driven rows scanned.
-Expected pattern (paper §5.1.1): large wins on spatially selective queries,
-little effect on low-selectivity ones.
+Two parts:
+
+- ``fig7_sip/`` — per benchmark query: execution time with SIP on vs off
+  (fixed S-Plan so the only difference is the I-Range/E-list filtering),
+  plus driven rows scanned. Expected pattern (paper §5.1.1): large wins on
+  spatially selective queries, little effect on low-selectivity ones.
+- ``sip_phase/`` — phase-level timings of the Phase 1-2 serial prefix on a
+  ≥10k-node synthetic tree: the per-block python walks
+  (``candidate_nodes_looped`` + ``select_looped``) against the batched
+  level-synchronous pipeline (``candidate_nodes`` over a driver-block batch
+  + ``select_batch``). The acceptance target is ≥ 5x on the combined
+  Phase 1-2 time in the spatially-selective regime.
 """
 from __future__ import annotations
 
+import numpy as np
+
+from repro.core import node_select, squadtree
 from repro.core.executor import ExecConfig, StreakEngine
 
 from . import common
 
+# phase-benchmark workloads: (name, n_blocks, boxes_per_block, dist, n_cs)
+_PHASE_CASES = [
+    ("selective", 16, 64, 0.003, 1),
+    ("wide", 16, 64, 0.01, 5),
+]
+
+
+def _phase_tree(n=40_000, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    sizes = rng.exponential(0.0015, size=(n, 2))
+    boxes = np.concatenate([pts, pts + sizes], axis=1)
+    tree = squadtree.build(np.arange(n, dtype=np.int64) + 10, boxes,
+                           rng.integers(1, 12, size=n).astype(np.int64),
+                           l_max=9, leaf_capacity=4)
+    return tree, boxes, rng
+
+
+def _phase_rows() -> list:
+    tree, boxes, rng = _phase_tree()
+    assert tree.n_nodes >= 10_000
+    rows = []
+    params = node_select.SelectParams()
+    for name, n_blocks, m, dist, n_cs in _PHASE_CASES:
+        box_sets = [tree.extent.normalize(
+            boxes[rng.integers(0, len(boxes), size=m)])
+            for _ in range(n_blocks)]
+        driven_cs = np.arange(1, 1 + n_cs, dtype=np.int64)
+        card = tree.cs_stats.cardinality_all(driven_cs)
+        prep = tree.bloom_self.prepare(driven_cs)
+
+        def p1_loop():
+            return [tree.candidate_nodes_looped(b, dist, driven_cs)
+                    for b in box_sets]
+
+        def p1_batch():
+            return tree.candidate_nodes(box_sets, dist, driven_cs,
+                                        prepared=prep)
+
+        masks_l, masks_b = p1_loop(), p1_batch()
+        for mask_b, mask_l in zip(masks_b, masks_l):
+            np.testing.assert_array_equal(mask_b, mask_l)
+
+        def p2_loop():
+            return [node_select.select_looped(tree, mk, driven_cs, params,
+                                              card) for mk in masks_l]
+
+        def p2_batch():
+            return node_select.select_batch(tree, masks_b, driven_cs,
+                                            params, card)
+
+        for v_b, v_l in zip(p2_batch(), p2_loop()):
+            np.testing.assert_array_equal(v_b, v_l)
+
+        def p12_loop():
+            return [node_select.select_looped(tree, mk, driven_cs, params,
+                                              card) for mk in p1_loop()]
+
+        def p12_batch():
+            return node_select.select_batch(tree, p1_batch(), driven_cs,
+                                            params, card)
+
+        shape = (f"nodes={tree.n_nodes};blocks={n_blocks};m={m};"
+                 f"dist={dist};cs={n_cs}")
+        t1l, t1b = common.timeit(p1_loop), common.timeit(p1_batch)
+        t2l, t2b = common.timeit(p2_loop), common.timeit(p2_batch)
+        tl, tb = common.timeit(p12_loop), common.timeit(p12_batch)
+        rows += [
+            common.row(f"sip_phase/{name}/phase1_looped", t1l, shape),
+            common.row(f"sip_phase/{name}/phase1_batched", t1b,
+                       f"speedup={t1l/max(t1b,1):.2f}x"),
+            common.row(f"sip_phase/{name}/phase2_looped", t2l, shape),
+            common.row(f"sip_phase/{name}/phase2_batched", t2b,
+                       f"speedup={t2l/max(t2b,1):.2f}x"),
+            common.row(f"sip_phase/{name}/phase12_looped", tl, shape),
+            common.row(f"sip_phase/{name}/phase12_batched", tb,
+                       f"speedup={tl/max(tb,1):.2f}x"),
+        ]
+    return rows
+
 
 def run() -> list:
-    rows = []
+    rows = _phase_rows()
     for ds_name in ("yago3", "lgd"):
         ds = common.dataset(ds_name)
         for qi, q in enumerate(ds.queries):

@@ -4,8 +4,10 @@ Prints ``name,us_per_call,derived`` CSV rows. See DESIGN.md §6 for the
 paper-artifact -> benchmark index.
 
 ``--json`` additionally writes one ``BENCH_<suite>.json`` per suite run
-(e.g. ``BENCH_refine.json``, ``BENCH_join.json``) into the current
-directory — the perf trajectory future changes are compared against.
+(e.g. ``BENCH_refine.json``, ``BENCH_join.json``, ``BENCH_sip.json``) into
+the current directory — the perf trajectory future changes are compared
+against. ``python -m benchmarks.run sip --json`` refreshes the Phase 1-2
+trajectory after touching the SIP path.
 """
 from __future__ import annotations
 

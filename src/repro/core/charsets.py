@@ -103,6 +103,53 @@ def cs_catalog(subjects: np.ndarray, predicates: np.ndarray) -> dict:
     return catalog
 
 
+@dataclasses.dataclass(frozen=True)
+class PreparedKeys:
+    """Hoisted Bloom-probe material for a fixed key set.
+
+    Phase 1 probes the same driven-CS keys against every frontier node of
+    every driver block, so the double-hashing positions (and the 32-bit key
+    halves the Pallas kernel consumes) are query-invariant — the executor
+    prepares them once per query and the level-synchronous frontier reuses
+    them for every level of every lookahead window.
+    """
+
+    keys: np.ndarray    # (C,) int64 original keys
+    word: np.ndarray    # (C, k) int64 word index per probe
+    shift: np.ndarray   # (C, k) uint32 bit offset per probe
+    nbits: int          # filter geometry the positions were computed for
+    k: int
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+
+# Probe-backend dispatch for the query path. "numpy" is the oracle;
+# "kernel" routes through kernels/ops.bloom_probe (native Pallas on TPU, the
+# jnp reference on CPU); "interpret" forces the Pallas kernel in interpret
+# mode (tests). "auto" resolves to the kernel only when a TPU is attached —
+# per-level frontier shapes vary, so on CPU the numpy path stays fastest.
+PROBE_BACKENDS = ("auto", "numpy", "kernel", "interpret")
+_auto_backend: str | None = None
+
+
+def resolve_probe_backend(backend: str | None) -> str:
+    global _auto_backend
+    b = backend or "auto"
+    if b not in PROBE_BACKENDS:
+        raise ValueError(f"unknown probe backend {b!r}")
+    if b != "auto":
+        return b
+    if _auto_backend is None:
+        try:
+            import jax
+            _auto_backend = ("kernel" if jax.default_backend() == "tpu"
+                             else "numpy")
+        except Exception:  # pragma: no cover - jax is a hard dep in practice
+            _auto_backend = "numpy"
+    return _auto_backend
+
+
 @dataclasses.dataclass
 class BloomBank:
     """`n_filters` Bloom filters of `words * 32` bits each, k hash probes."""
@@ -153,6 +200,43 @@ class BloomBank:
         """Does filter contain ANY of `keys`? (used for driven-CS checks)."""
         fi = np.full(len(keys), filter_idx, dtype=np.int64)
         return bool(self.contains(fi, keys).any())
+
+    def prepare(self, keys: np.ndarray) -> PreparedKeys:
+        """Hoist the double-hashing of `keys` into a reusable PreparedKeys."""
+        keys = np.asarray(keys, dtype=np.int64)
+        pos = self._positions(keys)                      # (C, k)
+        return PreparedKeys(keys=keys, word=pos // 32,
+                            shift=(pos % 32).astype(np.uint32),
+                            nbits=self.nbits, k=self.k)
+
+    def contains_prepared(self, filter_idx: np.ndarray,
+                          prep: PreparedKeys) -> np.ndarray:
+        """(len(filter_idx), len(prep)) bool probe matrix, hashing hoisted."""
+        assert prep.nbits == self.nbits and prep.k == self.k
+        fi = np.asarray(filter_idx, dtype=np.int64)
+        word = self.bits[fi[:, None, None], prep.word[None]]   # (F, C, k)
+        return ((word >> prep.shift[None]) & np.uint32(1)).all(axis=-1)
+
+    def contains_any_batch(self, filter_idx: np.ndarray, prep: PreparedKeys,
+                           backend: str | None = None) -> np.ndarray:
+        """Per-filter ANY over a prepared key set -> (len(filter_idx),) bool.
+
+        This is the Phase-1 frontier probe: `backend` picks the numpy oracle
+        or the Pallas `bloom_probe` kernel route (see PROBE_BACKENDS). All
+        routes run the same 32-bit integer math, so results are bit-identical.
+        """
+        fi = np.asarray(filter_idx, dtype=np.int64)
+        if len(fi) == 0 or len(prep) == 0:
+            return np.zeros(len(fi), dtype=bool)
+        backend = resolve_probe_backend(backend)
+        if backend == "numpy":
+            return self.contains_prepared(fi, prep).any(axis=-1)
+        from ..kernels import ops  # lazy: keep charsets importable without jax
+        rows = self.bits[np.repeat(fi, len(prep))]       # (F*C, W)
+        keys = np.tile(prep.keys, len(fi))               # (F*C,)
+        hit = ops.bloom_probe(rows, keys, k=self.k,
+                              interpret=backend == "interpret")
+        return np.asarray(hit).reshape(len(fi), len(prep)).any(axis=-1)
 
     def nbytes(self) -> int:
         return self.bits.nbytes

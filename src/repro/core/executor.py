@@ -17,7 +17,7 @@ from .join import Relation, filter_in_ranges, join, scan_pattern
 from .planner import QueryPlan, SidePlan, plan_query
 from .query import Query, Var
 from .spatial_join import JoinStats
-from .store import QuadStore
+from .store import DirectedNumericScan, QuadStore
 from .topk import TopK
 
 
@@ -30,6 +30,8 @@ class ExecConfig:
     join_backend: str = "numpy"         # "numpy" | "kernel" | "fused"
     fused_batch_cols: int = 4096        # driven columns per fused-kernel call
     refine_chunk: int = 1024            # candidate pairs refined per θ check
+    sip_lookahead: int = 8              # driver blocks per batched SIP call
+    probe_backend: str | None = None    # charsets.PROBE_BACKENDS; None = auto
     mbr_join_fn: object = None          # override Phase-3 MBR join (baselines)
     select_params: node_select.SelectParams = dataclasses.field(
         default_factory=node_select.SelectParams)
@@ -97,7 +99,6 @@ class StreakEngine:
         for tp, var, w in side.quant_terms:
             if exclude_primary and side.primary is not None and tp is side.primary[0]:
                 continue
-            from .store import DirectedNumericScan
             scan = DirectedNumericScan(self.store.numeric[int(tp.p)], descending)
             kw = self._kw(w, descending)
             v_best = scan.ni.block_max[0] if kw > 0 else scan.ni.block_min[-1]
@@ -211,43 +212,72 @@ class StreakEngine:
         card_all = tree.cs_stats.cardinality_all(plan.driven_cs)
 
         n_blocks = driver.scan.n_blocks if driver.scan is not None else 1
+        # ---- Phases 1-2, batched over a lookahead window ----------------
+        # Query-invariant probe material is hoisted here: the driven-CS keys
+        # are hashed once (`prepare`) and reused by every frontier level of
+        # every window. `_sip_prefetch` then runs candidate-node search +
+        # node selection for `sip_lookahead` driver blocks per call, sharing
+        # Bloom-row gathers and MBR tests across blocks, while the per-block
+        # θ check below still terminates the scan exactly where the looped
+        # path would (speculative SIP work past the cut is discarded).
+        prepared = (tree.bloom_self.prepare(plan.driven_cs)
+                    if cfg.use_sip else None)
+        window = max(int(cfg.sip_lookahead), 1) if cfg.use_sip else 1
+        pending: dict[int, tuple] = {}
+
+        def _sip_prefetch(b0: int) -> None:
+            mats = []
+            for w in range(b0, min(b0 + window, n_blocks)):
+                if driver.scan is not None:
+                    block_rel, _ = self._block_relation(driver, w)
+                    join_chain = driver.join_patterns
+                else:  # no numeric driver: single full block
+                    block_rel = self._cached_scan(driver.all_ordered[0])
+                    join_chain = driver.all_ordered[1:]
+                drv_rel = self._join_chain(block_rel, join_chain)
+                uniq_ents = boxes = None
+                if drv_rel.n:
+                    # driver entities with geometry
+                    uniq_ents = np.unique(drv_rel[driver.entity_var])
+                    boxes = store.spatial_box_of(uniq_ents)
+                    has_geom = ~np.isnan(boxes[:, 0])
+                    uniq_ents, boxes = uniq_ents[has_geom], boxes[has_geom]
+                mats.append((w, drv_rel, uniq_ents, boxes))
+            if cfg.use_sip:
+                box_sets = [bx if bx is not None else np.zeros((0, 4))
+                            for (_, _, _, bx) in mats]
+                in_v = tree.candidate_nodes(
+                    box_sets, plan.dist_norm, plan.driven_cs,
+                    prepared=prepared, probe_backend=cfg.probe_backend)
+                v_stars = node_select.select_batch(
+                    tree, in_v, plan.driven_cs, cfg.select_params, card_all)
+            else:
+                v_stars = [np.array([0], dtype=np.int64)] * len(mats)
+            for (w, drv_rel, uniq_ents, boxes), v_star in zip(mats, v_stars):
+                pending[w] = (drv_rel, uniq_ents, boxes, v_star)
+
         for b in range(n_blocks):
             # ---- driver block in score-key order -----------------------
             if driver.scan is not None:
-                block_rel, vals = self._block_relation(driver, b)
-                driver_primary_best = kw_p * float(vals[0])
-                join_chain = driver.join_patterns
-            else:  # no numeric driver: single full block, no driver bound
-                block_rel = self._cached_scan(driver.all_ordered[0])
+                driver_primary_best = kw_p * float(driver.scan.get_block(b)[0][0])
+            else:  # no numeric driver: no driver bound
                 driver_primary_best = 0.0
-                join_chain = driver.all_ordered[1:]
             # ---- early termination check --------------------------------
             ub = driver_primary_best + driver_other + driven_bound
             if topk.full and ub <= topk.theta:
                 stats.early_terminated = True
                 break
             stats.driver_blocks += 1
-            drv_rel = self._join_chain(block_rel, join_chain)
+            if b not in pending:
+                pending.clear()
+                _sip_prefetch(b)
+            drv_rel, uniq_ents, boxes, v_star = pending.pop(b)
             if drv_rel.n == 0:
                 continue
-            # driver entities with geometry
-            ents = drv_rel[driver.entity_var]
-            uniq_ents = np.unique(ents)
-            boxes = store.spatial_box_of(uniq_ents)
-            has_geom = ~np.isnan(boxes[:, 0])
-            uniq_ents, boxes = uniq_ents[has_geom], boxes[has_geom]
-            if len(uniq_ents) == 0:
+            if uniq_ents is None or len(uniq_ents) == 0:
                 continue
-
-            # ---- Phases 1-2: candidate nodes, V*, SIP material ----------
-            if cfg.use_sip:
-                in_v = tree.candidate_nodes(boxes, plan.dist_norm, plan.driven_cs)
-                v_star = node_select.select(tree, in_v, plan.driven_cs,
-                                            cfg.select_params, card_all)
-                if len(v_star) == 0:
-                    continue  # nothing on the driven side can join this block
-            else:
-                v_star = np.array([0], dtype=np.int64)
+            if cfg.use_sip and len(v_star) == 0:
+                continue  # nothing on the driven side can join this block
             stats.v_star_sizes.append(len(v_star))
             intervals, explicit = tree.filter_material(v_star)
 

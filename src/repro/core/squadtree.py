@@ -21,8 +21,37 @@ import dataclasses
 import numpy as np
 
 from . import charsets, geometry, ids, morton
-from .charsets import BloomBank, NodeCSStats, build_node_cs_stats
+from .charsets import BloomBank, NodeCSStats, PreparedKeys, build_node_cs_stats
 from .geometry import Extent
+
+
+def _csr_gather(starts: np.ndarray, cnt: np.ndarray) -> np.ndarray:
+    """Flat indices of the slices [starts_i, starts_i + cnt_i), concatenated.
+
+    The cumsum/repeat per-slice iota: equivalent to
+    ``np.concatenate([np.arange(s, s + c) for s, c in zip(starts, cnt)])``
+    without the python loop.
+    """
+    total = int(cnt.sum())
+    base = np.repeat(starts - np.concatenate([[0], np.cumsum(cnt)[:-1]]), cnt)
+    return base + np.arange(total)
+
+
+def _pad_box_sets(box_sets) -> np.ndarray:
+    """Stack ragged per-block box sets into (B, M_max, 4) with NaN padding.
+
+    NaN rows fail every interval comparison in `geometry.boxes_intersect`,
+    so padded slots can never contribute a hit — the batched frontier sees
+    exactly the real boxes of each block.
+    """
+    if isinstance(box_sets, np.ndarray):
+        return box_sets
+    m_max = max((len(b) for b in box_sets), default=0)
+    out = np.full((len(box_sets), max(m_max, 1), 4), np.nan)
+    for i, b in enumerate(box_sets):
+        if len(b):
+            out[i, :len(b)] = b
+    return out
 
 
 @dataclasses.dataclass
@@ -49,11 +78,35 @@ class SQuadTree:
     obj_mbr: np.ndarray         # (M, 4) float64 normalized
     obj_entity: np.ndarray      # (M,) int64 original entity key
     entity_to_id: dict          # entity key -> spatial id
+    # --- derived level buckets (computed in __post_init__) ---
+    # Nodes are laid out parents-before-children but levels interleave (DFS
+    # build order); the CSR below buckets node indices by level so the
+    # level-synchronous frontier and the node-selection DP sweep touch each
+    # level's nodes with one contiguous gather instead of an O(N) rescan.
+    level_order: np.ndarray = dataclasses.field(init=False)    # (N,) int64
+    level_offsets: np.ndarray = dataclasses.field(init=False)  # (L + 2,)
+
+    def __post_init__(self):
+        levels = self.node_level.astype(np.int64)
+        n_levels = int(levels.max()) + 1 if len(levels) else 0
+        counts = np.bincount(levels, minlength=n_levels)
+        self.level_order = np.argsort(levels, kind="stable").astype(np.int64)
+        self.level_offsets = np.concatenate(
+            [[0], np.cumsum(counts)]).astype(np.int64)
 
     # ------------------------------------------------------------------
     @property
     def n_nodes(self) -> int:
         return len(self.node_z)
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.level_offsets) - 1
+
+    def level_nodes(self, lvl: int) -> np.ndarray:
+        """Node indices at `lvl`, in parents-before-children build order."""
+        return self.level_order[self.level_offsets[lvl]:
+                                self.level_offsets[lvl + 1]]
 
     @property
     def n_objects(self) -> int:
@@ -88,17 +141,104 @@ class SQuadTree:
     # ------------------------------------------------------------------
     # Phase 1: candidate-node search (paper §3.2.1)
     # ------------------------------------------------------------------
-    def candidate_nodes(self, driver_boxes: np.ndarray, dist_norm: float,
-                        driven_cs: np.ndarray,
-                        which: str = "self") -> np.ndarray:
-        """Boolean mask over nodes: the connected set V.
+    def candidate_nodes(self, driver_boxes, dist_norm: float,
+                        driven_cs: np.ndarray, which: str = "self",
+                        prepared: PreparedKeys | None = None,
+                        probe_backend: str | None = None) -> np.ndarray:
+        """Boolean candidate mask(s): the connected set V per driver block.
 
         A node survives iff (a) its Bloom filter reports some driven-CS object
         intersecting it, and (b) its MBR expanded by the query distance
-        intersects at least one driver-object MBR. Traversal is breadth-first
-        from the root so V stays connected (descendants of pruned nodes are
-        never visited).
+        intersects at least one driver-object MBR. The traversal is a
+        level-synchronous frontier over the level-bucketed node layout and is
+        *batched*: `driver_boxes` may be one block ``(M, 4)`` -> ``(N,)``
+        mask, or a batch ``(B, M, 4)`` (or a ragged list of ``(M_i, 4)``
+        arrays) -> ``(B, N)`` masks computed in one pass. Bloom-row probes
+        are shared across blocks (a node is probed once per level regardless
+        of how many blocks' frontiers reached it) and the MBR tests broadcast
+        over the whole batch. Results are bit-identical to the looped oracle
+        `candidate_nodes_looped`.
+
+        `prepared` hoists the driven-CS key hashing out of the call (see
+        `BloomBank.prepare`); `probe_backend` routes the Bloom probes through
+        the Pallas `bloom_probe` kernel or the numpy oracle
+        (`charsets.PROBE_BACKENDS`).
         """
+        single = isinstance(driver_boxes, np.ndarray) and driver_boxes.ndim == 2
+        boxes = driver_boxes[None] if single else _pad_box_sets(driver_boxes)
+        bank = {"self": self.bloom_self, "in": self.bloom_in,
+                "out": self.bloom_out}[which]
+        driven_cs = np.asarray(driven_cs, dtype=np.int64)
+        n_b = len(boxes)
+        in_v = np.zeros((n_b, self.n_nodes), dtype=bool)
+        if n_b and len(driven_cs) and boxes.shape[1]:
+            if prepared is None or prepared.nbits != bank.nbits \
+                    or prepared.k != bank.k \
+                    or not np.array_equal(prepared.keys, driven_cs):
+                prepared = bank.prepare(driven_cs)
+            expanded = geometry.expand_boxes(boxes, dist_norm)  # (B, M, 4)
+            # Flat (block, node, box) triple frontier — a simultaneous
+            # descent of every block's expanded driver boxes down the tree.
+            # Because child MBRs nest inside their parent's (clipped unions
+            # over subsets of the parent's objects), a box that misses a
+            # node's MBR can never hit a descendant's, so each (block, node)
+            # box list shrinks geometrically instead of re-testing all M
+            # boxes at every frontier node like the looped BFS does. Runs of
+            # equal (block, node) stay contiguous by construction, so
+            # per-node reductions are bincount over run ids.
+            m = boxes.shape[1]
+            tb = np.repeat(np.arange(n_b, dtype=np.int64), m)   # block
+            tx = np.tile(np.arange(m, dtype=np.int64), n_b)     # box
+            keep = np.isfinite(expanded[tb, tx, 0])  # drop ragged padding
+            tb, tx = tb[keep], tx[keep]
+            tn = np.zeros(len(tb), dtype=np.int64)              # node (root)
+            while len(tb):
+                # Bloom-probe each distinct frontier node once, shared by
+                # every block whose frontier reached it
+                uniq_nodes = np.unique(tn)
+                cs_hit = bank.contains_any_batch(uniq_nodes, prepared,
+                                                 probe_backend)
+                node_cs = cs_hit[np.searchsorted(uniq_nodes, tn)]
+                tboxes = expanded[tb, tx]                       # (T, 4)
+                hit = node_cs & geometry.boxes_intersect(
+                    self.node_mbr[tn], tboxes)
+                change = np.empty(len(tb), dtype=bool)
+                change[0] = True
+                change[1:] = (tb[1:] != tb[:-1]) | (tn[1:] != tn[:-1])
+                run_id = np.cumsum(change) - 1
+                starts = np.flatnonzero(change)
+                ok_run = np.bincount(run_id, weights=hit) > 0
+                in_v[tb[starts], tn[starts]] = ok_run
+                # descend: surviving (block, node) groups push their
+                # MBR-hitting boxes into the children whose cell they touch
+                cand = ok_run[run_id] & hit
+                if not cand.any():
+                    break
+                cb, cn, cx = tb[cand], tn[cand], tx[cand]
+                cbox = tboxes[cand]
+                kids = self.node_children[cn]                   # (C, 4)
+                parts = []
+                for q in range(4):
+                    kq = kids[:, q]
+                    v = np.flatnonzero(kq >= 0)
+                    if not len(v):
+                        continue
+                    cell_hit = geometry.boxes_intersect(
+                        cbox[v], self.node_cell[kq[v]])
+                    vi = v[cell_hit]
+                    parts.append((cb[vi], kq[vi], cx[vi]))
+                if not parts:
+                    break
+                tb = np.concatenate([p[0] for p in parts])
+                tn = np.concatenate([p[1] for p in parts])
+                tx = np.concatenate([p[2] for p in parts])
+        return in_v[0] if single else in_v
+
+    def candidate_nodes_looped(self, driver_boxes: np.ndarray,
+                               dist_norm: float, driven_cs: np.ndarray,
+                               which: str = "self") -> np.ndarray:
+        """Per-block breadth-first oracle for `candidate_nodes` (kept for
+        cross-checking the batched frontier; same pruning, python BFS)."""
         bank = {"self": self.bloom_self, "in": self.bloom_in,
                 "out": self.bloom_out}[which]
         driven_cs = np.asarray(driven_cs, dtype=np.int64)
@@ -134,10 +274,11 @@ class SQuadTree:
         """
         v_star = np.asarray(v_star, dtype=np.int64)
         intervals = self.irange[v_star] if len(v_star) else np.zeros((0, 2), np.int64)
-        parts = [self.elist(int(a)) for a in v_star]
-        explicit = (np.unique(np.concatenate(parts))
-                    if parts and sum(len(p) for p in parts)
-                    else np.empty(0, dtype=np.int64))
+        starts = self.elist_offsets[v_star]
+        cnt = self.elist_offsets[v_star + 1] - starts
+        if cnt.sum() == 0:
+            return intervals, np.empty(0, dtype=np.int64)
+        explicit = np.unique(self.elist_ids[_csr_gather(starts, cnt)])
         return intervals, explicit
 
 
@@ -151,7 +292,6 @@ def _assign_ids(boxes_norm: np.ndarray, l_max: int
     lo = morton.encode_points(boxes_norm[:, 0:2], l_max)
     hi = morton.encode_points(boxes_norm[:, 2:4], l_max)
     level = morton.common_level(lo, hi, l_max)
-    zpath = morton.zpath_at(lo, l_max, 0) * 0  # placeholder, filled below
     zpath = np.asarray(lo, dtype=np.int64) >> (2 * (l_max - level))
     # local ids: running counter within each (zpath, level) node
     order = np.lexsort((np.arange(len(level)), zpath, level))
@@ -168,10 +308,6 @@ def _assign_ids(boxes_norm: np.ndarray, l_max: int
         run = np.arange(len(level)) - np.repeat(starts, lengths)
         same = run
     local[order] = same
-    if ids.L_MAX != l_max:
-        # re-scale zpath into the global L_MAX id space: treat the tree as the
-        # top `l_max` levels of the canonical depth-10 hierarchy.
-        pass
     oid = ids.encode(zpath, level, local)
     return oid, zpath, level
 
@@ -389,8 +525,7 @@ def radius_join(points_a: np.ndarray, points_b: np.ndarray, radius: float,
             if cnt.sum() == 0:
                 continue
             ii = np.repeat(np.arange(len(pa)), cnt)
-            jj = order_b[np.concatenate([np.arange(a, b) for a, b in zip(lo, hi)])] \
-                if cnt.sum() else np.empty(0, np.int64)
+            jj = order_b[_csr_gather(lo, cnt)]
             d = np.sqrt(((pa[ii] - pb[jj]) ** 2).sum(axis=1))
             keep = d <= radius
             if not include_self and len(pa) == len(pb):

@@ -1,0 +1,189 @@
+"""Batched level-synchronous Phases 1-2 vs the looped oracles.
+
+The batched candidate-node frontier (`SQuadTree.candidate_nodes` over a
+(B, M, 4) driver-block batch) and the batched node-selection DP
+(`node_select.select_batch`) must be *bit-identical* to the per-block python
+walks they replaced (`candidate_nodes_looped` / `select_looped`), across
+probe backends, and the engine's lookahead-window SIP path must leave
+`use_sip=True` results unchanged.
+"""
+import numpy as np
+import pytest
+
+from repro.core import charsets, node_select, squadtree
+from repro.core.executor import ExecConfig, StreakEngine
+from repro.data import synth_rdf
+
+
+def _random_tree(rng, n=None, l_max=None, leaf_capacity=None):
+    n = n or int(rng.integers(50, 800))
+    pts = rng.random((n, 2))
+    sizes = rng.exponential(0.004, size=(n, 2))
+    boxes = np.concatenate([pts, pts + sizes], axis=1)
+    keys = np.arange(1000, 1000 + n, dtype=np.int64)
+    cs = rng.integers(1, 8, size=n).astype(np.int64)
+    tree = squadtree.build(keys, boxes, cs,
+                           l_max=l_max or int(rng.integers(3, 8)),
+                           leaf_capacity=leaf_capacity
+                           or int(rng.integers(2, 32)))
+    return tree, boxes
+
+
+def _random_batch(rng, tree, boxes, b=None):
+    """Ragged batch of driver-block box sets (normalized), incl. empties."""
+    box_sets = []
+    for _ in range(b or int(rng.integers(1, 6))):
+        m = int(rng.integers(0, 20))
+        idx = rng.integers(0, len(boxes), size=m)
+        box_sets.append(tree.extent.normalize(boxes[idx]) if m
+                        else np.zeros((0, 4)))
+    return box_sets
+
+
+# ------------------------------------------------------- level buckets ----
+def test_level_buckets_partition_nodes():
+    tree, _ = _random_tree(np.random.default_rng(0), n=400)
+    seen = np.concatenate([tree.level_nodes(lvl)
+                           for lvl in range(tree.n_levels)])
+    assert len(seen) == tree.n_nodes
+    np.testing.assert_array_equal(np.sort(seen), np.arange(tree.n_nodes))
+    for lvl in range(tree.n_levels):
+        nodes = tree.level_nodes(lvl)
+        np.testing.assert_array_equal(tree.node_level[nodes], lvl)
+        # stable bucketing preserves parents-before-children build order
+        assert np.all(np.diff(nodes) > 0)
+
+
+# ----------------------------------------- batched phase 1 + 2 vs loops ----
+@pytest.mark.parametrize("seed", range(6))
+def test_batched_phases12_bit_identical_to_looped(seed):
+    rng = np.random.default_rng(seed)
+    tree, boxes = _random_tree(rng)
+    box_sets = _random_batch(rng, tree, boxes)
+    driven_cs = np.unique(rng.integers(1, 8, size=3).astype(np.int64))
+    dist = float(rng.random() * 0.05)
+    params = node_select.SelectParams(alpha_io=float(rng.random() * 2),
+                                      alpha_cpu=float(rng.random()),
+                                      alpha_merge=float(rng.random()))
+    masks = tree.candidate_nodes(box_sets, dist, driven_cs)
+    assert masks.shape == (len(box_sets), tree.n_nodes)
+    v_stars = node_select.select_batch(tree, masks, driven_cs, params)
+    for bi, bx in enumerate(box_sets):
+        loop_mask = tree.candidate_nodes_looped(bx, dist, driven_cs)
+        np.testing.assert_array_equal(masks[bi], loop_mask)
+        np.testing.assert_array_equal(
+            v_stars[bi], node_select.select_looped(tree, loop_mask,
+                                                   driven_cs, params))
+        # single-block (M, 4) entry point returns the same (N,) mask
+        np.testing.assert_array_equal(
+            tree.candidate_nodes(bx, dist, driven_cs), loop_mask)
+        np.testing.assert_array_equal(
+            node_select.select(tree, loop_mask, driven_cs, params),
+            v_stars[bi])
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel", "interpret"])
+def test_probe_backends_bit_identical(backend):
+    rng = np.random.default_rng(7)
+    tree, boxes = _random_tree(rng, n=300)
+    box_sets = _random_batch(rng, tree, boxes, b=3)
+    driven_cs = np.array([1, 3, 5], dtype=np.int64)
+    ref = tree.candidate_nodes(box_sets, 0.02, driven_cs,
+                               probe_backend="numpy")
+    got = tree.candidate_nodes(box_sets, 0.02, driven_cs,
+                               probe_backend=backend)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_contains_any_batch_matches_contains():
+    rng = np.random.default_rng(1)
+    bank = charsets.BloomBank.empty(32, words=8, k=3)
+    keys = rng.integers(0, 1 << 40, size=200).astype(np.int64)
+    bank.add(rng.integers(0, 32, size=200).astype(np.int64), keys)
+    probe = np.concatenate([keys[:20], rng.integers(0, 1 << 40, size=20)
+                            .astype(np.int64)])
+    fi = np.arange(32, dtype=np.int64)
+    prep = bank.prepare(probe)
+    expect = bank.contains(np.repeat(fi, len(probe)),
+                           np.tile(probe, len(fi))
+                           ).reshape(len(fi), -1).any(axis=1)
+    for backend in ("numpy", "kernel", "interpret"):
+        got = bank.contains_any_batch(fi, prep, backend)
+        np.testing.assert_array_equal(got, expect)
+
+
+def test_filter_material_matches_per_node_loop():
+    tree, _ = _random_tree(np.random.default_rng(3), n=600, leaf_capacity=4)
+    rng = np.random.default_rng(4)
+    v_star = np.unique(rng.integers(0, tree.n_nodes, size=12))
+    intervals, explicit = tree.filter_material(v_star)
+    np.testing.assert_array_equal(intervals, tree.irange[v_star])
+    parts = [tree.elist(int(a)) for a in v_star]
+    expect = (np.unique(np.concatenate(parts))
+              if sum(len(p) for p in parts) else np.empty(0, np.int64))
+    np.testing.assert_array_equal(explicit, expect)
+    # empty V*
+    iv, ex = tree.filter_material(np.empty(0, np.int64))
+    assert iv.shape == (0, 2) and len(ex) == 0
+
+
+# --------------------------------------------- small-tree DP optimality ----
+@pytest.mark.parametrize("seed", range(4))
+def test_batched_select_optimal_on_small_trees(seed):
+    """The batched DP stays optimal: compare against brute_force."""
+    rng = np.random.default_rng(seed)
+    tree, boxes = _random_tree(rng, n=40, l_max=3, leaf_capacity=4)
+    in_v = np.zeros((3, tree.n_nodes), dtype=bool)
+    in_v[:, 0] = True
+    for b in range(3):
+        for i in range(1, tree.n_nodes):
+            if in_v[b, tree.node_parent[i]] and rng.random() < 0.8:
+                in_v[b, i] = True
+    driven = np.array([1, 2], dtype=np.int64)
+    params = node_select.SelectParams(alpha_io=1.0, alpha_cpu=0.3,
+                                      alpha_merge=0.2)
+    v_stars = node_select.select_batch(tree, in_v, driven, params)
+    cost, xi = node_select.node_costs(tree, np.ones(tree.n_nodes, bool),
+                                      driven, params)
+    for b in range(3):
+        _, cost_bf = node_select.brute_force(tree, in_v[b], driven, params)
+        v_dp = v_stars[b]
+        total = float(cost[v_dp].sum())
+        with_el = [a for a in v_dp if tree.elist_size(int(a)) > 0]
+        total += float(xi[v_dp].sum()) if len(with_el) > 1 else 0.0
+        assert total <= cost_bf + 1e-9
+
+
+# ------------------------------------------------------- engine e2e -------
+@pytest.fixture(scope="module")
+def lgd():
+    return synth_rdf.make_lgd(n_per_class=150, seed=0, block=128)
+
+
+@pytest.mark.parametrize("qi", range(8))
+def test_engine_results_unchanged_under_batched_sip(lgd, qi):
+    """use_sip=True results are identical across lookahead widths and to
+    the no-SIP exhaustive path (SIP is a pure filter)."""
+    q = lgd.queries[qi]
+    oracle, _, _ = StreakEngine(lgd.store,
+                                ExecConfig(use_sip=False)).execute(q)
+    one, _, st1 = StreakEngine(lgd.store,
+                               ExecConfig(sip_lookahead=1)).execute(q)
+    win, _, stw = StreakEngine(lgd.store,
+                               ExecConfig(sip_lookahead=8)).execute(q)
+    np.testing.assert_allclose(np.sort(one), np.sort(oracle),
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.sort(win), np.sort(one),
+                               rtol=1e-9, atol=1e-12)
+    # the lookahead window must not change which blocks get SIP-processed
+    assert stw.v_star_sizes == st1.v_star_sizes
+    assert stw.driver_blocks == st1.driver_blocks
+
+
+def test_engine_kernel_probe_backend_equivalent(lgd):
+    q = lgd.queries[1]
+    ref, _, _ = StreakEngine(lgd.store).execute(q)
+    got, _, _ = StreakEngine(
+        lgd.store, ExecConfig(probe_backend="kernel")).execute(q)
+    np.testing.assert_allclose(np.sort(got), np.sort(ref),
+                               rtol=1e-9, atol=1e-12)
