@@ -8,6 +8,14 @@ kernel against the matrix+mask path across M, N, k: both compute the same
 global top-k pair set, but the fused path consumes the evolving θ between
 column batches (early termination inside the join) and never materializes
 the (M, N) matrix — its peak intermediate bytes are independent of N.
+
+The `merge_join/` section is the relational-path microbench: the two-phase
+rank/gather merge join (`join`, arithmetic composite-key packing + one
+dispatched rank pass + CSR gather) against the pre-rework numpy path
+(`join_looped`: lexsort + per-column np.unique dense ranking + range
+expansion), on duplicate-keyed relations — plus the same comparison for
+`semijoin`, `filter_in_ranges`, and the end-to-end engine `join_impl` knob.
+Both paths must produce bit-identical relations before being timed.
 """
 from __future__ import annotations
 
@@ -16,7 +24,9 @@ import numpy as np
 from repro.core import spatial_join
 from repro.core.baselines import SyncRTreeEngine
 from repro.core.executor import ExecConfig, StreakEngine
-from repro.core.join import Relation
+from repro.core.join import (Relation, filter_in_ranges,
+                             filter_in_ranges_looped, join, join_looped,
+                             semijoin, semijoin_looped)
 from repro.core.topk import TopK
 from repro.kernels import ops as kops
 
@@ -72,6 +82,73 @@ def fused_vs_matrix() -> list:
     return rows
 
 
+def _assert_rel_identical(x: Relation, y: Relation) -> None:
+    assert set(x) == set(y)
+    for c in x:
+        np.testing.assert_array_equal(x[c], y[c])
+
+
+def merge_join_micro() -> list:
+    """Two-phase merge join vs the pre-rework numpy looped path.
+
+    Two key-multiplicity regimes: `dup` (domain = n/4, ~4x fan-out per key —
+    output materialization, paid by both paths, dominates) and `sel`
+    (domain = 4n, selective — the join machinery itself dominates, where the
+    packing/rank core replaces the looped path's per-column unique sorts).
+    """
+    rows = []
+    rng = np.random.default_rng(7)
+    for n, n_cols, regime in ((2048, 1, "dup"), (8192, 1, "dup"),
+                              (8192, 1, "sel"), (8192, 2, "dup"),
+                              (8192, 2, "sel"), (32768, 2, "sel")):
+        dom = n // 4 if regime == "dup" else 4 * n
+        names = ("x", "y")[:n_cols]
+
+        def rel(extra):
+            r = Relation({c: rng.integers(0, dom, n).astype(np.int64)
+                          for c in names})
+            r[extra] = rng.integers(0, 1 << 20, n).astype(np.int64)
+            return r
+
+        a, b = rel("va"), rel("vb")
+        out_l, out_m = join_looped(a, b), join(a, b)
+        _assert_rel_identical(out_l, out_m)
+        t_l = common.timeit(lambda: join_looped(a, b))
+        t_m = common.timeit(lambda: join(a, b))
+        tag = f"n{n}_c{n_cols}_{regime}"
+        rows.append(common.row(f"merge_join/{tag}_looped", t_l,
+                               f"out_rows={out_l.n}"))
+        rows.append(common.row(f"merge_join/{tag}_merge", t_m,
+                               f"out_rows={out_m.n};speedup={t_l/t_m:.2f}x"))
+        if n == 8192 and n_cols == 2 and regime == "dup":
+            _assert_rel_identical(semijoin_looped(a, b), semijoin(a, b))
+            t_l = common.timeit(lambda: semijoin_looped(a, b))
+            t_m = common.timeit(lambda: semijoin(a, b))
+            rows.append(common.row(f"merge_join/{tag}_semi_looped", t_l, ""))
+            rows.append(common.row(f"merge_join/{tag}_semi_merge", t_m,
+                                   f"speedup={t_l/t_m:.2f}x"))
+            iv = rng.integers(0, 1 << 20, (512, 2)).astype(np.int64)
+            iv.sort(axis=1)
+            ex = np.unique(rng.integers(0, 1 << 20, 2048).astype(np.int64))
+            _assert_rel_identical(filter_in_ranges_looped(a, "va", iv, ex),
+                                  filter_in_ranges(a, "va", iv, ex))
+            t_l = common.timeit(lambda: filter_in_ranges_looped(a, "va",
+                                                                iv, ex))
+            t_m = common.timeit(lambda: filter_in_ranges(a, "va", iv, ex))
+            rows.append(common.row(f"merge_join/{tag}_sip_looped", t_l, ""))
+            rows.append(common.row(f"merge_join/{tag}_sip_merge", t_m,
+                                   f"speedup={t_l/t_m:.2f}x"))
+    # end-to-end: the engine's join_impl knob on one dataset/query
+    ds = common.dataset("lgd")
+    q = ds.queries[0]
+    for impl in ("looped", "merge"):
+        eng = StreakEngine(ds.store, ExecConfig(join_impl=impl))
+        eng.execute(q)  # warm caches
+        t = common.timeit(lambda: eng.execute(q))
+        rows.append(common.row(f"merge_join/engine_lgd_{impl}", t, ""))
+    return rows
+
+
 def engine_backends() -> list:
     """End-to-end engine time per Phase-3 backend on one dataset/query."""
     rows = []
@@ -86,7 +163,8 @@ def engine_backends() -> list:
 
 
 def run() -> list:
-    rows = fused_vs_matrix()
+    rows = merge_join_micro()
+    rows += fused_vs_matrix()
     rows += engine_backends()
     for ds_name in ("yago3", "lgd"):
         ds = common.dataset(ds_name)

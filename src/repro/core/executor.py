@@ -28,6 +28,8 @@ class ExecConfig:
     force_plan: str | None = None       # "N" | "S" | None (adaptive)
     force_driver: str | None = None     # "a" | "b" | None
     join_backend: str = "numpy"         # "numpy" | "kernel" | "fused"
+    join_impl: str | None = None        # core/join.JOIN_IMPLS; None = auto
+    #                                     ("merge", the jitted two-phase core)
     fused_batch_cols: int = 4096        # driven columns per fused-kernel call
     refine_chunk: int = 1024            # candidate pairs refined per θ check
     sip_lookahead: int = 8              # driver blocks per batched SIP call
@@ -66,12 +68,13 @@ class StreakEngine:
             self._scan_cache[key] = scan_pattern(self.store, tp)
         return self._scan_cache[key]
 
-    def _join_chain(self, base: Relation, patterns: list) -> Relation:
+    def _join_chain(self, base: Relation, patterns: list,
+                    impl: str | None = None) -> Relation:
         rel = base
         for tp in patterns:
             if rel.n == 0:
                 break
-            rel = join(rel, self._cached_scan(tp))
+            rel = join(rel, self._cached_scan(tp), impl=impl)
         return rel
 
     def _block_relation(self, side: SidePlan, b: int) -> tuple[Relation, np.ndarray]:
@@ -184,8 +187,8 @@ class StreakEngine:
                 continue
             pair_rel = Relation({driver.entity_var: uniq_ents[ci],
                                  driven.entity_var: dvn_ents[cj]})
-            out = join(drv_rel, pair_rel)
-            out = join(out, dvn_rel)
+            out = join(drv_rel, pair_rel, impl=plan.join_impl)
+            out = join(out, dvn_rel, impl=plan.join_impl)
             if out.n == 0:
                 continue
             keys = self._score_key(out, plan)
@@ -199,7 +202,8 @@ class StreakEngine:
         cfg = self.config
         store = self.store
         tree = store.tree
-        plan = plan_query(store, q, force_driver=cfg.force_driver)
+        plan = plan_query(store, q, force_driver=cfg.force_driver,
+                          join_impl=cfg.join_impl)
         stats = ExecStats()
         topk = TopK(k=plan.k, descending=True)  # operates in key space
         driver, driven = plan.driver, plan.driven
@@ -234,7 +238,8 @@ class StreakEngine:
                 else:  # no numeric driver: single full block
                     block_rel = self._cached_scan(driver.all_ordered[0])
                     join_chain = driver.all_ordered[1:]
-                drv_rel = self._join_chain(block_rel, join_chain)
+                drv_rel = self._join_chain(block_rel, join_chain,
+                                           plan.join_impl)
                 uniq_ents = boxes = None
                 if drv_rel.n:
                     # driver entities with geometry
@@ -298,7 +303,8 @@ class StreakEngine:
                                              key_needed, stats)
             else:
                 stats.plan_s += 1
-                dvn_rel = self._driven_splan(driven, intervals, explicit, stats)
+                dvn_rel = self._driven_splan(driven, plan, intervals, explicit,
+                                             stats)
             if dvn_rel.n == 0:
                 continue
 
@@ -334,28 +340,28 @@ class StreakEngine:
         return scores, rows, stats
 
     # ------------------------------------------------------------------
-    def _driven_full(self, driven: SidePlan) -> Relation:
+    def _driven_full(self, driven: SidePlan, impl: str | None) -> Relation:
         """Fully-joined driven sub-query, cached per query (S-Plan is a
         full scan per the paper; only the SIP filter varies per block)."""
         # key on the pattern *contents*: id(tp) can collide after pattern
         # objects are garbage-collected, silently reusing a stale relation
-        key = ("__driven_full",) + tuple((tp.g, tp.s, tp.p, tp.o)
-                                         for tp in driven.all_ordered)
+        key = ("__driven_full", impl) + tuple((tp.g, tp.s, tp.p, tp.o)
+                                              for tp in driven.all_ordered)
         if key not in self._scan_cache:
             rel = self._cached_scan(driven.all_ordered[0])
-            rel = self._join_chain(rel, driven.all_ordered[1:])
+            rel = self._join_chain(rel, driven.all_ordered[1:], impl)
             self._scan_cache[key] = rel
         return self._scan_cache[key]
 
-    def _driven_splan(self, driven: SidePlan, intervals, explicit,
-                      stats: ExecStats) -> Relation:
+    def _driven_splan(self, driven: SidePlan, plan: QueryPlan, intervals,
+                      explicit, stats: ExecStats) -> Relation:
         """S-Plan: spatial join pushed down -- one full scan of the driven
         sub-query (cached), then I-Range/E-list skipping of its rows."""
-        rel = self._driven_full(driven)
+        rel = self._driven_full(driven, plan.join_impl)
         stats.driven_rows_scanned += rel.n
         if self.config.use_sip and driven.entity_var in rel:
             rel = filter_in_ranges(rel, driven.entity_var, intervals,
-                                   explicit)
+                                   explicit, impl=plan.join_impl)
         stats.driven_rows_after_sip += rel.n
         return rel
 
@@ -374,12 +380,15 @@ class StreakEngine:
             stats.driven_rows_scanned += block_rel.n
             if cfg.use_sip and driven.entity_var in block_rel:
                 block_rel = filter_in_ranges(block_rel, driven.entity_var,
-                                             intervals, explicit)
-            joined = self._join_chain(block_rel, driven.join_patterns)
+                                             intervals, explicit,
+                                             impl=plan.join_impl)
+            joined = self._join_chain(block_rel, driven.join_patterns,
+                                      plan.join_impl)
             if cfg.use_sip and driven.entity_var not in block_rel \
                     and driven.entity_var in joined:
                 joined = filter_in_ranges(joined, driven.entity_var,
-                                          intervals, explicit)
+                                          intervals, explicit,
+                                          impl=plan.join_impl)
             stats.driven_rows_after_sip += joined.n
             if joined.n:
                 parts.append(joined)

@@ -1,16 +1,42 @@
 """Vectorized relational algebra over column blocks.
 
 A Relation is a dict of equal-length int64 numpy columns keyed by variable
-name. Joins are sort-merge over composite keys (numpy lexsort + searchsorted),
-which is the vectorized analogue of RDF-3X's merge joins over sorted index
-scans.
+name. Joins are sort-merge over composite keys, the vectorized analogue of
+RDF-3X's merge joins over sorted permutation-index scans.
+
+Every equi-join primitive here (`join`, `semijoin`, `filter_in_ranges`)
+shares one machinery: `composite_keys` packs the `on` columns of both sides
+into order-isomorphic int64 scalars (arithmetic range packing, with a dense
+np.unique ranking fallback when the domain product would overflow), and the
+two-phase rank/gather core turns the rank pass into a single call on the
+`kernels/ops.merge_join_ranks` backend (numpy searchsorted oracle on CPU,
+Pallas counting kernel on TPU, jitted CPU twin / interpret mode for tests)
+followed by a static-shape CSR cumsum/repeat gather (`squadtree.csr_gather`).
+
+The pre-rework per-pattern numpy implementations — lexsort + per-column
+np.unique dense ranking + range expansion — are kept verbatim as the
+`*_looped` oracles; the merge path must stay bit-identical to them
+(including row order: both sort stably by the same composite key).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .query import TriplePattern, Var
+from .squadtree import csr_gather
 from .store import G, O, P, QuadStore, S
+
+# `impl` knob for the relational primitives: "merge" is the two-phase
+# rank/gather core (backend-dispatched rank pass), "looped" the pre-rework
+# numpy oracle. "auto" resolves to "merge".
+JOIN_IMPLS = ("auto", "merge", "looped")
+
+
+def resolve_join_impl(impl: str | None) -> str:
+    impl = impl or "auto"
+    if impl not in JOIN_IMPLS:
+        raise ValueError(f"unknown join impl {impl!r}")
+    return "merge" if impl == "auto" else impl
 
 
 class Relation(dict):
@@ -54,27 +80,153 @@ def scan_pattern(store: QuadStore, tp: TriplePattern) -> Relation:
                      for name, cols in var_cols.items()})
 
 
-def _composite_key(rel: Relation, names: list[str]) -> np.ndarray:
-    """Lexicographic rank array for the given columns (stable)."""
-    cols = [rel[n] for n in names]
-    order = np.lexsort(tuple(reversed(cols)))
-    return order
+# ---------------------------------------------------------------------------
+# shared composite-key machinery
+# ---------------------------------------------------------------------------
+
+# packed keys must stay strictly below int64-max, the rank kernel's padding
+# sentinel (kernels/merge_join.py)
+_KEY_SPACE = (1 << 63) - 1
 
 
-def join(a: Relation, b: Relation, on: list[str] | None = None) -> Relation:
-    """Natural equi-join on shared variables (sort-merge)."""
+def composite_keys(a: Relation, b: Relation,
+                   on: list[str]) -> tuple[np.ndarray, np.ndarray, int]:
+    """Order-isomorphic int64 scalar keys for the composite `on` columns,
+    plus the exact key-domain bound `scale` (keys live in [0, scale)).
+
+    Columns are range-offset and mixed arithmetically (key = key * span +
+    (v - vmin)), so the packed scalars compare exactly like the column
+    tuples and no per-column sorting is needed. When the running domain
+    product would leave [0, 2^63-1), the offending column — and, if still
+    necessary, the accumulated prefix keys — are dense-ranked over the union
+    of both sides (np.unique), which bounds every factor by the row count
+    while preserving order. Both sides must be non-empty.
+    """
+    ka = np.zeros(a.n, dtype=np.int64)
+    kb = np.zeros(b.n, dtype=np.int64)
+    scale = 1  # python int: packed keys so far live in [0, scale)
+    for c in on:
+        va = np.asarray(a[c], dtype=np.int64)
+        vb = np.asarray(b[c], dtype=np.int64)
+        vmin = int(min(va.min(), vb.min()))
+        span = int(max(va.max(), vb.max())) - vmin + 1
+        if scale * span > _KEY_SPACE:
+            uniq, inv = np.unique(np.concatenate([va, vb]),
+                                  return_inverse=True)
+            va, vb = inv[:len(va)], inv[len(va):]
+            vmin, span = 0, len(uniq)
+            if scale * span > _KEY_SPACE:
+                uniq, inv = np.unique(np.concatenate([ka, kb]),
+                                      return_inverse=True)
+                ka, kb = inv[:len(ka)], inv[len(ka):]
+                scale = len(uniq)
+                if scale * span > _KEY_SPACE:
+                    # both factors are now bounded by the combined row
+                    # count, so this needs > ~3e9 rows per side — raise
+                    # rather than let the packing wrap int64 silently
+                    raise OverflowError(
+                        f"composite key domain {scale}x{span} exceeds int64")
+        ka = ka * np.int64(span) + (va - np.int64(vmin))
+        kb = kb * np.int64(span) + (vb - np.int64(vmin))
+        scale *= span
+    return ka, kb, scale
+
+
+def _sort_with_perm(k: np.ndarray, scale: int) -> tuple[np.ndarray,
+                                                        np.ndarray]:
+    """Sorted keys + the stable sorting permutation.
+
+    When the (key, row-index) pair packs into int64 — scale tracked by
+    `composite_keys` leaves ceil(log2(n)) free low bits — one vectorized
+    np.sort of the packed array replaces np.argsort(kind="stable"), whose
+    mergesort is ~10x slower than numpy's SIMD introsort on ints; the row
+    index doubles as the tiebreaker, so stability is preserved. Falls back
+    to the stable argsort when the pack would overflow.
+    """
+    n = len(k)
+    bits = max((n - 1).bit_length(), 1)
+    if scale <= (_KEY_SPACE >> bits):
+        packed = np.sort((k << np.int64(bits))
+                         | np.arange(n, dtype=np.int64))
+        return packed >> np.int64(bits), packed & np.int64((1 << bits) - 1)
+    perm = np.argsort(k, kind="stable")
+    return k[perm], perm
+
+
+def _ranks(table: np.ndarray, probes: np.ndarray,
+           backend: str | None, side: str = "both"):
+    """Insertion ranks of probes in the sorted table, via the dispatched
+    rank backend; side="both" -> (left, right), else the one bound."""
+    from ..kernels import ops  # lazy: keep core importable without jax
+    return ops.merge_join_ranks(table, probes, backend=backend, side=side)
+
+
+def _member_sorted(table: np.ndarray, probes: np.ndarray,
+                   backend: str | None) -> np.ndarray:
+    """Membership of probes in the sorted (not necessarily unique) table:
+    one left-rank pass plus a gather-compare."""
+    lo = _ranks(table, probes, backend, side="left")
+    hit = table[np.minimum(lo, len(table) - 1)] == probes
+    return hit  # lo == len(table) ⇒ probe > table[-1] ⇒ compare is False
+
+
+def _cartesian(a: Relation, b: Relation) -> Relation:
+    na, nb = a.n, b.n
+    out = Relation()
+    ia = np.repeat(np.arange(na), nb)
+    ib = np.tile(np.arange(nb), na)
+    for k, v in a.items():
+        out[k] = v[ia]
+    for k, v in b.items():
+        out[k] = v[ib]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# join
+# ---------------------------------------------------------------------------
+
+def join(a: Relation, b: Relation, on: list[str] | None = None,
+         impl: str | None = None, backend: str | None = None) -> Relation:
+    """Natural equi-join on shared variables (two-phase sort-merge).
+
+    Phase 1 (rank/count): stable-sort both packed key arrays, then one
+    backend call yields each probe row's [lo, hi) match range and CSR width
+    `hi - lo`. Phase 2 (gather): cumsum/repeat materializes the matching
+    (a-row, b-row) index pairs with static shapes and gathers the output
+    columns once. Output order is bit-identical to `join_looped`.
+    """
     if on is None:
         on = sorted(set(a.keys()) & set(b.keys()))
     if not on:  # cartesian product
-        na, nb = a.n, b.n
-        out = Relation()
-        ia = np.repeat(np.arange(na), nb)
-        ib = np.tile(np.arange(nb), na)
-        for k, v in a.items():
-            out[k] = v[ia]
-        for k, v in b.items():
-            out[k] = v[ib]
-        return out
+        return _cartesian(a, b)
+    if a.n == 0 or b.n == 0:
+        return Relation.empty(sorted(set(a) | set(b)))
+    if resolve_join_impl(impl) == "looped":
+        return join_looped(a, b, on)
+    ka, kb, scale = composite_keys(a, b, on)
+    kas, oa = _sort_with_perm(ka, scale)
+    kbs, ob = _sort_with_perm(kb, scale)
+    lo, hi = _ranks(kbs, kas, backend)
+    cnt = hi - lo
+    ia = np.repeat(np.arange(a.n), cnt)
+    ib = csr_gather(lo, cnt)
+    src_a, src_b = oa[ia], ob[ib]
+    out = Relation({k: v[src_a] for k, v in a.items()})
+    for k, v in b.items():
+        if k not in out:
+            out[k] = v[src_b]
+    return out
+
+
+def join_looped(a: Relation, b: Relation,
+                on: list[str] | None = None) -> Relation:
+    """Pre-rework numpy join (lexsort + per-column dense ranking +
+    searchsorted + range expansion), kept as the bit-identical oracle."""
+    if on is None:
+        on = sorted(set(a.keys()) & set(b.keys()))
+    if not on:  # cartesian product
+        return _cartesian(a, b)
     if a.n == 0 or b.n == 0:
         return Relation.empty(sorted(set(a) | set(b)))
     # sort both sides by the composite key
@@ -97,6 +249,13 @@ def join(a: Relation, b: Relation, on: list[str] | None = None) -> Relation:
         if k not in out:
             out[k] = v[ib]
     return out
+
+
+def _composite_key(rel: Relation, names: list[str]) -> np.ndarray:
+    """Lexicographic rank array for the given columns (stable)."""
+    cols = [rel[n] for n in names]
+    order = np.lexsort(tuple(reversed(cols)))
+    return order
 
 
 def _rank_rows(x: Relation, other: Relation, on: list[str]) -> np.ndarray:
@@ -127,8 +286,33 @@ def _expand_ranges(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
     return np.cumsum(out)
 
 
-def semijoin(a: Relation, b: Relation, on: list[str] | None = None) -> Relation:
-    """Rows of `a` that have at least one match in `b`."""
+# ---------------------------------------------------------------------------
+# semijoin
+# ---------------------------------------------------------------------------
+
+def semijoin(a: Relation, b: Relation, on: list[str] | None = None,
+             impl: str | None = None,
+             backend: str | None = None) -> Relation:
+    """Rows of `a` that have at least one match in `b` (original order).
+
+    Same machinery as `join`, but only the b side is sorted and a single
+    left-rank pass drives the membership test — no gather phase.
+    """
+    if on is None:
+        on = sorted(set(a.keys()) & set(b.keys()))
+    if not on or a.n == 0:
+        return a
+    if b.n == 0:
+        return a.take(np.empty(0, dtype=np.int64))
+    if resolve_join_impl(impl) == "looped":
+        return semijoin_looped(a, b, on)
+    ka, kb, _ = composite_keys(a, b, on)
+    return a.take(np.flatnonzero(_member_sorted(np.sort(kb), ka, backend)))
+
+
+def semijoin_looped(a: Relation, b: Relation,
+                    on: list[str] | None = None) -> Relation:
+    """Pre-rework numpy semijoin, kept as the bit-identical oracle."""
     if on is None:
         on = sorted(set(a.keys()) & set(b.keys()))
     if not on or a.n == 0:
@@ -146,20 +330,53 @@ def semijoin(a: Relation, b: Relation, on: list[str] | None = None) -> Relation:
     return a.take(np.flatnonzero(hit))
 
 
+# ---------------------------------------------------------------------------
+# SIP range/membership filter
+# ---------------------------------------------------------------------------
+
 def filter_in_ranges(rel: Relation, col: str, intervals: np.ndarray,
-                     explicit: np.ndarray) -> Relation:
+                     explicit: np.ndarray, impl: str | None = None,
+                     backend: str | None = None) -> Relation:
     """SIP filter (paper §3.2.2): keep rows whose `col` id lies in any I-Range
-    interval or equals an E-list id. Intervals are closed [lo, hi] rows."""
+    interval or equals an E-list id. Intervals are closed [lo, hi] rows.
+
+    The E-list membership test is the semijoin's `_member_sorted` rank test
+    against the sorted id table; the interval test uses the rank pass' upper
+    bound
+    against the interval starts with a running max of ends, so OVERLAPPING
+    intervals are handled (v is in the union iff the max end among intervals
+    starting <= v covers it). V* intervals are disjoint by construction, but
+    the general case must hold too.
+    """
+    if rel.n == 0 or (len(intervals) == 0 and len(explicit) == 0):
+        return rel if (len(intervals) or len(explicit)) else rel.take(
+            np.empty(0, dtype=np.int64))
+    if resolve_join_impl(impl) == "looped":
+        return filter_in_ranges_looped(rel, col, intervals, explicit)
+    vals = rel[col]
+    keep = np.zeros(rel.n, dtype=bool)
+    if len(intervals):
+        iv = intervals[np.argsort(intervals[:, 0])]
+        starts = iv[:, 0]
+        ends = np.maximum.accumulate(iv[:, 1])
+        pos = _ranks(starts, vals, backend, side="right") - 1
+        ok = pos >= 0
+        keep[ok] = vals[ok] <= ends[np.clip(pos[ok], 0, len(ends) - 1)]
+    if len(explicit):
+        keep |= _member_sorted(np.asarray(explicit, dtype=np.int64), vals,
+                               backend)
+    return rel.take(np.flatnonzero(keep))
+
+
+def filter_in_ranges_looped(rel: Relation, col: str, intervals: np.ndarray,
+                            explicit: np.ndarray) -> Relation:
+    """Pre-rework numpy SIP filter, kept as the bit-identical oracle."""
     if rel.n == 0 or (len(intervals) == 0 and len(explicit) == 0):
         return rel if (len(intervals) or len(explicit)) else rel.take(
             np.empty(0, dtype=np.int64))
     vals = rel[col]
     keep = np.zeros(rel.n, dtype=bool)
     if len(intervals):
-        # sort by start and take the running max of ends so OVERLAPPING
-        # intervals are handled (v is in the union iff the max end among
-        # intervals starting <= v covers it). V* intervals are disjoint by
-        # construction, but the general case must hold too.
         iv = intervals[np.argsort(intervals[:, 0])]
         starts = iv[:, 0]
         ends = np.maximum.accumulate(iv[:, 1])

@@ -15,6 +15,7 @@ import dataclasses
 
 import numpy as np
 
+from .join import resolve_join_impl
 from .query import Query, SpatialFilter, TriplePattern, Var
 from .store import DirectedNumericScan, QuadStore
 
@@ -65,6 +66,10 @@ class QueryPlan:
     driven_cs: np.ndarray
     descending: bool
     k: int
+    # relational primitive implementation (core/join.JOIN_IMPLS), resolved
+    # once at plan time so per-block APS plan switches (core/aps.py) reuse
+    # it with zero extra dispatch cost
+    join_impl: str = "merge"
 
 
 def resolve_spatial_vars(store: QuadStore, q: Query) -> tuple[str, str]:
@@ -139,7 +144,8 @@ def _build_side(store: QuadStore, patterns: list, entity_var: str,
 
 
 def plan_query(store: QuadStore, q: Query,
-               force_driver: str | None = None) -> QueryPlan:
+               force_driver: str | None = None,
+               join_impl: str | None = None) -> QueryPlan:
     assert q.spatial is not None, "plan_query expects a spatial top-k query"
     var_a, var_b = resolve_spatial_vars(store, q)
     patterns = list(q.patterns)
@@ -181,4 +187,5 @@ def plan_query(store: QuadStore, q: Query,
     return QueryPlan(driver=driver, driven=driven,
                      dist_world=q.spatial.dist, dist_norm=dist_norm,
                      metric=q.spatial.metric, driven_cs=driven_cs,
-                     descending=descending, k=q.k)
+                     descending=descending, k=q.k,
+                     join_impl=resolve_join_impl(join_impl))

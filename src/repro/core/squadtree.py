@@ -25,7 +25,7 @@ from .charsets import BloomBank, NodeCSStats, PreparedKeys, build_node_cs_stats
 from .geometry import Extent
 
 
-def _csr_gather(starts: np.ndarray, cnt: np.ndarray) -> np.ndarray:
+def csr_gather(starts: np.ndarray, cnt: np.ndarray) -> np.ndarray:
     """Flat indices of the slices [starts_i, starts_i + cnt_i), concatenated.
 
     The cumsum/repeat per-slice iota: equivalent to
@@ -278,7 +278,7 @@ class SQuadTree:
         cnt = self.elist_offsets[v_star + 1] - starts
         if cnt.sum() == 0:
             return intervals, np.empty(0, dtype=np.int64)
-        explicit = np.unique(self.elist_ids[_csr_gather(starts, cnt)])
+        explicit = np.unique(self.elist_ids[csr_gather(starts, cnt)])
         return intervals, explicit
 
 
@@ -525,7 +525,7 @@ def radius_join(points_a: np.ndarray, points_b: np.ndarray, radius: float,
             if cnt.sum() == 0:
                 continue
             ii = np.repeat(np.arange(len(pa)), cnt)
-            jj = order_b[_csr_gather(lo, cnt)]
+            jj = order_b[csr_gather(lo, cnt)]
             d = np.sqrt(((pa[ii] - pb[jj]) ** 2).sum(axis=1))
             keep = d <= radius
             if not include_self and len(pa) == len(pb):

@@ -18,6 +18,7 @@ from . import distance_join as _dj
 from . import flash_attention as _fa
 from . import fused_topk_join as _ftj
 from . import geom_refine as _gr
+from . import merge_join as _mj
 from . import morton_kernel as _mk
 from . import ref
 
@@ -84,6 +85,98 @@ def bucketed_min_core(a_planes, b_planes, interpret: bool | None = None):
     # CPU: the loop-structured host twin (kernel numerics, no (B, m, n)
     # cube); ref.bucketed_min_core_ref stays the test oracle
     return _gr.bucketed_min_core_host(a_planes, b_planes)
+
+
+# Rank-pass backend dispatch for the relational merge join (core/join.py).
+# "numpy" is the oracle (np.searchsorted, fastest on CPU); "cpu" is the
+# jitted loop-structured twin; "kernel" routes through the Pallas kernel on
+# TPU and the dense jnp oracle on CPU; "interpret" forces the Pallas kernel
+# in interpret mode (tests). "auto" resolves once per process.
+RANK_BACKENDS = ("auto", "numpy", "cpu", "kernel", "interpret")
+_auto_rank_backend: str | None = None
+
+
+def resolve_rank_backend(backend: str | None) -> str:
+    global _auto_rank_backend
+    b = backend or "auto"
+    if b not in RANK_BACKENDS:
+        raise ValueError(f"unknown merge-join rank backend {b!r}")
+    if b != "auto":
+        return b
+    if _auto_rank_backend is None:
+        _auto_rank_backend = "kernel" if _on_tpu() else "numpy"
+    return _auto_rank_backend
+
+
+def split_key_planes(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """int64 keys -> (hi, lo) int32 planes whose (signed hi, signed lo)
+    lexicographic order equals the int64 order (the lo sign bit is flipped
+    so signed int32 compares act as unsigned compares on the low half)."""
+    x = np.asarray(x, dtype=np.int64)
+    hi = (x >> np.int64(32)).astype(np.int32)
+    lo = (x & np.int64(0xFFFFFFFF)).astype(np.uint32)
+    return hi, (lo ^ np.uint32(1 << 31)).view(np.int32)
+
+
+def merge_join_ranks(table, probes, backend: str | None = None,
+                     interpret: bool | None = None, side: str = "both"):
+    """Insertion ranks of `probes` in the sorted int64 `table`: with
+    side="both" (the join's CSR widths) returns (lo, hi) int64 where
+    lo = searchsorted-left and hi = searchsorted-right; side="left"/"right"
+    returns just that bound (the semijoin membership / SIP interval tests —
+    the numpy backend then runs a single searchsorted and the CPU twin a
+    single binary search; the counting kernel's pass yields both for free).
+    The rank pass of the relational merge
+    join; see kernels/merge_join.py. Keys must be < int64-max (the kernel's
+    padding sentinel)."""
+    if side not in ("both", "left", "right"):
+        raise ValueError(f"unknown rank side {side!r}")
+    backend = resolve_rank_backend(
+        "interpret" if (interpret and backend in (None, "auto")) else backend)
+    table = np.asarray(table, dtype=np.int64)
+    probes = np.asarray(probes, dtype=np.int64)
+    m = len(probes)
+    if len(table) == 0 or m == 0:
+        z = np.zeros(m, dtype=np.int64)
+        return (z, z.copy()) if side == "both" else z
+    if backend == "numpy":
+        if side != "both":
+            return np.searchsorted(table, probes, side)
+        return (np.searchsorted(table, probes, "left"),
+                np.searchsorted(table, probes, "right"))
+    # pow2 size classes bound jit recompiles; the int64-max sentinel compares
+    # greater than every probe, so table padding never changes a rank, and
+    # padded probe rows are sliced off below
+    t_hi, t_lo = split_key_planes(_pad_pow2(table, (1 << 63) - 1))
+    p_hi, p_lo = split_key_planes(_pad_pow2(probes, 0))
+    if backend == "cpu":
+        out = _mj.merge_join_ranks_host(t_hi, t_lo, p_hi, p_lo, side=side)
+        if side != "both":
+            return np.asarray(out[:m]).astype(np.int64)
+        lo, hi = out
+    elif backend == "kernel" and not _on_tpu():
+        lo, hi = _ranks_ref_jit(jnp.asarray(t_hi), jnp.asarray(t_lo),
+                                jnp.asarray(p_hi), jnp.asarray(p_lo))
+    else:
+        lo, hi = _mj.merge_join_ranks(
+            jnp.asarray(t_hi), jnp.asarray(t_lo),
+            jnp.asarray(p_hi), jnp.asarray(p_lo),
+            interpret=backend == "interpret" and not _on_tpu())
+    lo = np.asarray(lo[:m]).astype(np.int64)
+    hi = np.asarray(hi[:m]).astype(np.int64)
+    return (lo, hi) if side == "both" else (lo if side == "left" else hi)
+
+
+def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
+    p = 1 << max(int(len(x) - 1).bit_length(), 3)
+    if p == len(x):
+        return x
+    return np.concatenate([x, np.full(p - len(x), fill, dtype=np.int64)])
+
+
+@jax.jit
+def _ranks_ref_jit(t_hi, t_lo, p_hi, p_lo):
+    return ref.merge_join_ranks_ref(t_hi, t_lo, p_hi, p_lo)
 
 
 def bloom_probe(bits, keys, k: int = 3, interpret: bool | None = None):

@@ -76,6 +76,26 @@ def bucketed_min_core_ref(a_planes: tuple, b_planes: tuple) -> jnp.ndarray:
     return jnp.min(core, axis=(1, 2))
 
 
+# --------------------------------------------------- merge-join rank pass --
+def merge_join_ranks_ref(t_hi: jnp.ndarray, t_lo: jnp.ndarray,
+                         p_hi: jnp.ndarray, p_lo: jnp.ndarray
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels/merge_join.py: dense counting insertion ranks.
+
+    t_* (N,) / p_* (M,) int32 planes of int64 keys split as
+    (hi32, sign-bit-flipped lo32), table sorted by the underlying int64.
+    Materializes the (M, N) comparison masks (it is the specification, not
+    the streaming implementation) and returns (lo (M,), hi (M,)) int32 with
+    lo[i] = #{table < probe_i}, hi[i] = #{table <= probe_i}.
+    """
+    hi_eq = t_hi[None, :] == p_hi[:, None]
+    lt = (t_hi[None, :] < p_hi[:, None]) | (hi_eq
+                                            & (t_lo[None, :] < p_lo[:, None]))
+    le = lt | (hi_eq & (t_lo[None, :] == p_lo[:, None]))
+    return (jnp.sum(lt.astype(jnp.int32), axis=1),
+            jnp.sum(le.astype(jnp.int32), axis=1))
+
+
 # -------------------------------------------------------------- bloom probe --
 def _mix32_jnp(x, seed: int):
     x = (x + jnp.uint32(0x9E3779B9) * jnp.uint32(seed + 1)).astype(jnp.uint32)

@@ -23,6 +23,19 @@ def yago():
     return synth_rdf.make_yago(n_places=600, seed=1, block=128)
 
 
+@pytest.fixture(scope="module")
+def quickstart():
+    """(store, query) from the examples/quickstart.py workload."""
+    import importlib.util
+    import pathlib
+    spec = importlib.util.spec_from_file_location(
+        "quickstart", pathlib.Path(__file__).resolve().parents[1]
+        / "examples" / "quickstart.py")
+    qs = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(qs)
+    return qs.build_demo()
+
+
 def _scores_match(a: np.ndarray, b: np.ndarray):
     """Top-k score multisets must match (ties may permute rows)."""
     np.testing.assert_allclose(np.sort(a), np.sort(b), rtol=1e-9, atol=1e-12)
@@ -156,18 +169,41 @@ def test_fused_backend_equivalent_yago(yago, qi):
     _scores_match(ref, got)
 
 
-def test_fused_backend_quickstart_bit_identical():
+@pytest.mark.parametrize("qi", [0, 3, 5])
+def test_join_impl_settings_equivalent(lgd, qi):
+    """Top-k identical across `join_impl` settings (merge vs looped oracle),
+    with identical per-block APS routing. Q1/Q6 take an APS plan switch
+    mid-query (their plan_log mixes S and N blocks), so the merge join is
+    exercised on both the S-Plan full scan and the N-Plan block path."""
+    q = lgd.queries[qi]
+    ref, _, st_l = StreakEngine(
+        lgd.store, ExecConfig(join_impl="looped")).execute(q)
+    got, _, st_m = StreakEngine(
+        lgd.store, ExecConfig(join_impl="merge")).execute(q)
+    _scores_match(ref, got)
+    assert st_m.plan_log == st_l.plan_log
+    if qi in (0, 5):  # the impl knob must not change APS's routing
+        assert len(set(st_m.plan_log)) > 1
+
+
+def test_join_impl_quickstart_bit_identical(quickstart):
+    """Same ids, same scores across join_impl settings on the
+    examples/quickstart.py workload."""
+    store, q = quickstart
+    s1, r1, _ = StreakEngine(
+        store, ExecConfig(block=16, join_impl="looped")).execute(q)
+    s2, r2, _ = StreakEngine(
+        store, ExecConfig(block=16, join_impl="merge")).execute(q)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(r1["region"], r2["region"])
+    np.testing.assert_array_equal(r1["river"], r2["river"])
+
+
+def test_fused_backend_quickstart_bit_identical(quickstart):
     """Acceptance: same ids, same scores as the numpy backend on the
     examples/quickstart.py workload (tiny batch size forces several
     θ-consuming batches per block)."""
-    import importlib.util
-    import pathlib
-    spec = importlib.util.spec_from_file_location(
-        "quickstart", pathlib.Path(__file__).resolve().parents[1]
-        / "examples" / "quickstart.py")
-    qs = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(qs)
-    store, q = qs.build_demo()
+    store, q = quickstart
     s1, r1, _ = StreakEngine(store, ExecConfig(block=16)).execute(q)
     s2, r2, _ = StreakEngine(
         store, ExecConfig(block=16, join_backend="fused",

@@ -1,0 +1,207 @@
+"""Relational-path property tests: the two-phase merge join vs the oracles.
+
+The jitted merge `join` / `semijoin` / `filter_in_ranges`
+(core/join.py, rank pass dispatched through kernels/ops.merge_join_ranks)
+must be *bit-identical* — same rows, same order — to the pre-rework numpy
+`*_looped` oracles across duplicate-key, empty-relation, skewed-multiplicity,
+single-column, and overflow-domain inputs, on every dispatch backend:
+the numpy searchsorted oracle, the jitted CPU twin, the dense jnp kernel
+route, and the interpret-mode Pallas kernel.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import join as J
+from repro.core.join import Relation
+from repro.kernels import merge_join as mj
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+# "numpy" = searchsorted oracle; "cpu" = jitted loop-structured twin;
+# "kernel" = dense jnp route (Pallas-native on TPU); "interpret" = Pallas
+# kernel in interpret mode
+BACKENDS = ("numpy", "cpu", "kernel", "interpret")
+
+
+def _assert_rel_identical(got: Relation, want: Relation):
+    assert set(got) == set(want)
+    assert got.n == want.n
+    for c in want:
+        np.testing.assert_array_equal(got[c], want[c])
+
+
+@st.composite
+def relation_pairs(draw):
+    """Joinable relation pairs over the corner regimes: duplicate-heavy
+    (dom=1..3), skewed multiplicity (a hot key on both sides), empty
+    relations, single- vs multi-column keys, and id domains wide enough to
+    force the composite-key dense-rank fallbacks (2^40 per column hits the
+    per-column ranking on 2+ columns; 2^60 leaves a ~2^60 first-column
+    scale, so the second column also forces the accumulated-prefix
+    re-rank)."""
+    seed = draw(st.integers(0, 2 ** 32 - 1))
+    n_a = draw(st.integers(0, 48))
+    n_b = draw(st.integers(0, 48))
+    n_cols = draw(st.integers(1, 3))
+    dom = draw(st.sampled_from([1, 3, 16, 1 << 40, 1 << 60]))
+    hot = draw(st.floats(0.0, 1.0))
+    rng = np.random.default_rng(seed)
+
+    def side(n, extra):
+        rel = Relation()
+        for c in ("x", "y", "z")[:n_cols]:
+            v = rng.integers(0, dom, n).astype(np.int64)
+            v[rng.random(n) < hot] = np.int64(dom // 2)   # skewed key
+            rel[c] = v
+        rel[extra] = rng.integers(0, 5, n).astype(np.int64)
+        return rel
+
+    return side(n_a, "a_only"), side(n_b, "b_only")
+
+
+@given(relation_pairs())
+@settings(max_examples=30, deadline=None)
+def test_join_bit_identical_all_backends(pair):
+    a, b = pair
+    want = J.join_looped(a, b)
+    for backend in BACKENDS:
+        _assert_rel_identical(J.join(a, b, backend=backend), want)
+    _assert_rel_identical(J.join(a, b, impl="looped"), want)
+
+
+@given(relation_pairs())
+@settings(max_examples=30, deadline=None)
+def test_semijoin_bit_identical_all_backends(pair):
+    a, b = pair
+    want = J.semijoin_looped(a, b)
+    for backend in BACKENDS:
+        _assert_rel_identical(J.semijoin(a, b, backend=backend), want)
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(0, 40), st.integers(0, 6),
+       st.integers(0, 8))
+@settings(max_examples=30, deadline=None)
+def test_filter_in_ranges_bit_identical_all_backends(seed, n, n_iv, n_ex):
+    rng = np.random.default_rng(seed)
+    rel = Relation({"e": rng.integers(0, 100, n).astype(np.int64),
+                    "v": rng.integers(0, 5, n).astype(np.int64)})
+    iv = rng.integers(0, 100, (n_iv, 2)).astype(np.int64)
+    iv.sort(axis=1)                               # closed [lo, hi] rows
+    ex = np.unique(rng.integers(0, 100, n_ex).astype(np.int64))
+    want = J.filter_in_ranges_looped(rel, "e", iv, ex)
+    for backend in BACKENDS:
+        _assert_rel_identical(
+            J.filter_in_ranges(rel, "e", iv, ex, backend=backend), want)
+
+
+# ------------------------------------------------------------- edge cases --
+def test_empty_and_cartesian_edges():
+    a = Relation({"x": np.array([1, 2], dtype=np.int64)})
+    b = Relation({"y": np.array([7], dtype=np.int64)})
+    empty = Relation.empty(["x"])
+    for impl in ("merge", "looped"):
+        cart = J.join(a, b, impl=impl)            # no shared vars
+        assert cart.n == 2 and set(cart) == {"x", "y"}
+        assert J.join(a, empty, impl=impl).n == 0
+        assert J.join(empty, a, impl=impl).n == 0
+        assert J.semijoin(empty, a, impl=impl).n == 0
+        _assert_rel_identical(J.semijoin(a, empty.take(np.empty(0, np.int64)),
+                                         on=[], impl=impl), a)
+    # no intervals and no explicit ids -> SIP eliminates every row
+    assert J.filter_in_ranges(a, "x", np.empty((0, 2), np.int64),
+                              np.empty(0, np.int64)).n == 0
+
+
+def test_unknown_impl_and_backend_raise():
+    a = Relation({"x": np.array([1], dtype=np.int64)})
+    with pytest.raises(ValueError):
+        J.join(a, a, impl="bogus")
+    with pytest.raises(ValueError):
+        kops.merge_join_ranks(np.array([1]), np.array([1]), backend="bogus")
+    with pytest.raises(ValueError):
+        kops.merge_join_ranks(np.array([1]), np.array([1]), side="middle")
+
+
+# ------------------------------------------------------- composite keys ----
+@given(relation_pairs())
+@settings(max_examples=30, deadline=None)
+def test_composite_keys_order_isomorphic(pair):
+    """Packed scalars compare exactly like the column tuples."""
+    a, b = pair
+    on = sorted(set(a) & set(b))
+    if a.n == 0 or b.n == 0:
+        return
+    ka, kb, scale = J.composite_keys(a, b, on)
+    rows_a = list(zip(*(a[c] for c in on)))
+    rows_b = list(zip(*(b[c] for c in on)))
+    both_keys = np.concatenate([ka, kb])
+    both_rows = rows_a + rows_b
+    assert both_keys.min() >= 0 and int(both_keys.max()) < scale
+    order = np.argsort(both_keys, kind="stable")
+    for i, j in zip(order[:-1], order[1:]):
+        assert both_rows[i] <= both_rows[j]
+        assert (both_keys[i] == both_keys[j]) == (both_rows[i] == both_rows[j])
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 200),
+       st.sampled_from([4, 1 << 8, 1 << 55]))
+@settings(max_examples=30, deadline=None)
+def test_sort_with_perm_matches_stable_argsort(seed, n, dom):
+    """Both branches (index-packed np.sort and the argsort fallback) return
+    the stable permutation; dom=2^55 with n free low bits forces the
+    fallback."""
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, dom, n).astype(np.int64)
+    ks, perm = J._sort_with_perm(k, dom)
+    want = np.argsort(k, kind="stable")
+    np.testing.assert_array_equal(perm, want)
+    np.testing.assert_array_equal(ks, k[want])
+
+
+# ----------------------------------------------------------- rank pass -----
+@given(st.integers(0, 2 ** 32 - 1), st.integers(0, 300), st.integers(0, 200),
+       st.sampled_from([8, 1 << 20, 1 << 62]))
+@settings(max_examples=25, deadline=None)
+def test_rank_backends_match_searchsorted(seed, n, m, dom):
+    """All rank backends equal np.searchsorted on sorted int64 tables,
+    including negative keys and magnitudes crossing the 32-bit plane split."""
+    rng = np.random.default_rng(seed)
+    table = np.sort(rng.integers(-dom, dom, n).astype(np.int64))
+    probes = rng.integers(-dom, dom, m).astype(np.int64)
+    want_lo = np.searchsorted(table, probes, "left")
+    want_hi = np.searchsorted(table, probes, "right")
+    for backend in BACKENDS:
+        lo, hi = kops.merge_join_ranks(table, probes, backend=backend)
+        np.testing.assert_array_equal(lo, want_lo)
+        np.testing.assert_array_equal(hi, want_hi)
+        np.testing.assert_array_equal(
+            kops.merge_join_ranks(table, probes, backend=backend,
+                                  side="left"), want_lo)
+        np.testing.assert_array_equal(
+            kops.merge_join_ranks(table, probes, backend=backend,
+                                  side="right"), want_hi)
+
+
+def test_rank_kernel_grid_and_padding_sweep():
+    """Interpret-mode kernel vs the dense ref across probe blocks crossing
+    grid boundaries and tables crossing the 128-lane padding boundary."""
+    rng = np.random.default_rng(0)
+    for n, m, bb in ((1, 1, 8), (127, 20, 8), (128, 24, 8), (129, 9, 8),
+                     (300, 70, 64), (5, 200, 64)):
+        table = np.sort(rng.integers(-(1 << 50), 1 << 50, n).astype(np.int64))
+        probes = np.concatenate([
+            rng.integers(-(1 << 50), 1 << 50, m - m // 2).astype(np.int64),
+            rng.choice(table, m // 2)])           # exact hits incl. dups
+        t_hi, t_lo = kops.split_key_planes(table)
+        p_hi, p_lo = kops.split_key_planes(probes)
+        want_lo, want_hi = ref.merge_join_ranks_ref(t_hi, t_lo, p_hi, p_lo)
+        lo, hi = mj.merge_join_ranks(t_hi, t_lo, p_hi, p_lo, bb=bb,
+                                     interpret=True)
+        np.testing.assert_array_equal(np.asarray(lo), np.asarray(want_lo))
+        np.testing.assert_array_equal(np.asarray(hi), np.asarray(want_hi))
+        np.testing.assert_array_equal(np.asarray(want_lo),
+                                      np.searchsorted(table, probes, "left"))
+        host_lo, host_hi = mj.merge_join_ranks_host(t_hi, t_lo, p_hi, p_lo)
+        np.testing.assert_array_equal(np.asarray(host_lo), np.asarray(want_lo))
+        np.testing.assert_array_equal(np.asarray(host_hi), np.asarray(want_hi))

@@ -235,7 +235,11 @@ def test_serve_engine_continuous_batching():
         eng.submit(r)
     eng.run()
     assert all(r.done and len(r.out) == 4 for r in reqs)
-    # decode path consistency vs full forward
+    # decode path consistency vs full forward: compare in logit space with a
+    # tolerance instead of requiring argmax equality — under concurrent CPU
+    # load XLA may partition reductions differently between the decode and
+    # forward paths, and near-tied logits can flip the argmax (known flake)
     h = transformer.forward(params, jnp.asarray([[1, 2, 3]]), cfg)
-    lg = transformer.logits_fn(params, h, cfg)
-    assert reqs[0].out[0] == int(jnp.argmax(lg[0, -1]))
+    lg = np.asarray(transformer.logits_fn(params, h, cfg)[0, -1],
+                    dtype=np.float64)
+    assert lg[reqs[0].out[0]] >= lg.max() - 1e-4 * max(1.0, abs(lg.max()))
