@@ -23,7 +23,8 @@ def _parse_row(row: str) -> dict:
 
 def main() -> None:
     from . import (bench_aps, bench_engines, bench_join, bench_kernels,
-                   bench_refine, bench_sip, bench_sizes, bench_vary_k)
+                   bench_refine, bench_serve, bench_sip, bench_sizes,
+                   bench_vary_k)
     suites = [
         ("table1/3 sizes", bench_sizes),
         ("fig7 SIP", bench_sip),
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig12 vary k", bench_vary_k),
         ("refinement", bench_refine),
         ("kernels", bench_kernels),
+        ("serving", bench_serve),
     ]
     args = [a for a in sys.argv[1:] if a != "--json"]
     write_json = "--json" in sys.argv[1:]

@@ -34,6 +34,11 @@ class ExecConfig:
     refine_chunk: int = 1024            # candidate pairs refined per θ check
     sip_lookahead: int = 8              # driver blocks per batched SIP call
     probe_backend: str | None = None    # charsets.PROBE_BACKENDS; None = auto
+    rank_backend: str | None = None     # merge-join rank pass backend
+    #                                     (kernels/ops.RANK_BACKENDS); None=auto
+    kcap_auto: bool = False             # EWMA-autotune the fused partial width
+    #                                     (spatial_join.KcapTuner), shared
+    #                                     across this engine's queries
     mbr_join_fn: object = None          # override Phase-3 MBR join (baselines)
     select_params: node_select.SelectParams = dataclasses.field(
         default_factory=node_select.SelectParams)
@@ -60,6 +65,28 @@ class StreakEngine:
         self.store = store
         self.config = config or ExecConfig()
         self._scan_cache: dict = {}
+        # one tuner per engine: survivor statistics carry across queries,
+        # which is exactly the serving workload the autotuner targets
+        self.kcap_tuner = (spatial_join.KcapTuner()
+                           if self.config.kcap_auto else None)
+        # cross-tenant work sharing (serve mode): the serving layer sets
+        # this to a dict, and per-block sub-results that are PURE functions
+        # of (side signature, block) or (side signature, SIP intervals) —
+        # driver-block materialization, S-Plan filtered retrieval, N-Plan
+        # per-block joins — are memoized so concurrent tenants running the
+        # same query shape (e.g. different k) compute them once.
+        # θ-dependent work (guards, APS key_needed, N-Plan truncation,
+        # TopK) stays per-tenant, so shared results are bit-identical.
+        self.share_cache: dict | None = None
+
+    @staticmethod
+    def _side_sig(side: SidePlan, plan: QueryPlan) -> tuple:
+        """Hashable identity of everything a side's block materialization /
+        driven retrieval depends on (patterns fix the primary scan; the
+        ranking direction fixes its block order)."""
+        return (tuple((tp.g, tp.s, tp.p, tp.o) for tp in side.all_ordered),
+                side.entity_var, plan.descending, plan.join_impl,
+                plan.rank_backend)
 
     # ------------------------------------------------------------------
     def _cached_scan(self, tp) -> Relation:
@@ -69,12 +96,13 @@ class StreakEngine:
         return self._scan_cache[key]
 
     def _join_chain(self, base: Relation, patterns: list,
-                    impl: str | None = None) -> Relation:
+                    impl: str | None = None,
+                    backend: str | None = None) -> Relation:
         rel = base
         for tp in patterns:
             if rel.n == 0:
                 break
-            rel = join(rel, self._cached_scan(tp), impl=impl)
+            rel = join(rel, self._cached_scan(tp), impl=impl, backend=backend)
         return rel
 
     def _block_relation(self, side: SidePlan, b: int) -> tuple[Relation, np.ndarray]:
@@ -178,17 +206,33 @@ class StreakEngine:
                 stats.join.refine_skipped += len(pi) - start
                 break
             end = min(start + chunk, len(pi))
-            keep = spatial_join.refine(
-                pi[start:end], pj[start:end], store.geom_pool,
-                rows_a[start:end], rows_b[start:end],
-                plan.dist_world, plan.metric, stats.join)
+            # exact-geometry chunk verdicts are pure in (pool rows,
+            # distance, metric); same-shape tenants chunk identically
+            # (same pairs, same bound order), so serve mode shares them
+            sc = self.share_cache
+            rkey = None
+            if sc is not None:
+                rkey = ("refine", plan.metric, float(plan.dist_world),
+                        rows_a[start:end].tobytes(),
+                        rows_b[start:end].tobytes())
+            if rkey is not None and rkey in sc:
+                keep = sc[rkey]
+            else:
+                keep = spatial_join.refine(
+                    pi[start:end], pj[start:end], store.geom_pool,
+                    rows_a[start:end], rows_b[start:end],
+                    plan.dist_world, plan.metric, stats.join)
+                if rkey is not None:
+                    sc[rkey] = keep
             ci, cj = pi[start:end][keep], pj[start:end][keep]
             if len(ci) == 0:
                 continue
             pair_rel = Relation({driver.entity_var: uniq_ents[ci],
                                  driven.entity_var: dvn_ents[cj]})
-            out = join(drv_rel, pair_rel, impl=plan.join_impl)
-            out = join(out, dvn_rel, impl=plan.join_impl)
+            out = join(drv_rel, pair_rel, impl=plan.join_impl,
+                       backend=plan.rank_backend)
+            out = join(out, dvn_rel, impl=plan.join_impl,
+                       backend=plan.rank_backend)
             if out.n == 0:
                 continue
             keys = self._score_key(out, plan)
@@ -199,157 +243,28 @@ class StreakEngine:
 
     # ------------------------------------------------------------------
     def execute(self, q: Query) -> tuple[np.ndarray, Relation, ExecStats]:
-        cfg = self.config
-        store = self.store
-        tree = store.tree
-        plan = plan_query(store, q, force_driver=cfg.force_driver,
-                          join_impl=cfg.join_impl)
-        stats = ExecStats()
-        topk = TopK(k=plan.k, descending=True)  # operates in key space
-        driver, driven = plan.driver, plan.driven
+        cur = QueryCursor(self, q)
+        while not cur.done:
+            cur.step()
+        return cur.results()
 
-        driver_other = self._side_bound(driver, plan.descending, exclude_primary=True)
-        driven_bound = self._side_bound(driven, plan.descending, exclude_primary=False)
-        kw_p = (self._kw(driver.primary[2], plan.descending)
-                if driver.primary else 0.0)
-        # per-query (block-invariant) driven-CS cardinality per tree node
-        card_all = tree.cs_stats.cardinality_all(plan.driven_cs)
-
-        n_blocks = driver.scan.n_blocks if driver.scan is not None else 1
-        # ---- Phases 1-2, batched over a lookahead window ----------------
-        # Query-invariant probe material is hoisted here: the driven-CS keys
-        # are hashed once (`prepare`) and reused by every frontier level of
-        # every window. `_sip_prefetch` then runs candidate-node search +
-        # node selection for `sip_lookahead` driver blocks per call, sharing
-        # Bloom-row gathers and MBR tests across blocks, while the per-block
-        # θ check below still terminates the scan exactly where the looped
-        # path would (speculative SIP work past the cut is discarded).
-        prepared = (tree.bloom_self.prepare(plan.driven_cs)
-                    if cfg.use_sip else None)
-        window = max(int(cfg.sip_lookahead), 1) if cfg.use_sip else 1
-        pending: dict[int, tuple] = {}
-
-        def _sip_prefetch(b0: int) -> None:
-            mats = []
-            for w in range(b0, min(b0 + window, n_blocks)):
-                if driver.scan is not None:
-                    block_rel, _ = self._block_relation(driver, w)
-                    join_chain = driver.join_patterns
-                else:  # no numeric driver: single full block
-                    block_rel = self._cached_scan(driver.all_ordered[0])
-                    join_chain = driver.all_ordered[1:]
-                drv_rel = self._join_chain(block_rel, join_chain,
-                                           plan.join_impl)
-                uniq_ents = boxes = None
-                if drv_rel.n:
-                    # driver entities with geometry
-                    uniq_ents = np.unique(drv_rel[driver.entity_var])
-                    boxes = store.spatial_box_of(uniq_ents)
-                    has_geom = ~np.isnan(boxes[:, 0])
-                    uniq_ents, boxes = uniq_ents[has_geom], boxes[has_geom]
-                mats.append((w, drv_rel, uniq_ents, boxes))
-            if cfg.use_sip:
-                box_sets = [bx if bx is not None else np.zeros((0, 4))
-                            for (_, _, _, bx) in mats]
-                in_v = tree.candidate_nodes(
-                    box_sets, plan.dist_norm, plan.driven_cs,
-                    prepared=prepared, probe_backend=cfg.probe_backend)
-                v_stars = node_select.select_batch(
-                    tree, in_v, plan.driven_cs, cfg.select_params, card_all)
-            else:
-                v_stars = [np.array([0], dtype=np.int64)] * len(mats)
-            for (w, drv_rel, uniq_ents, boxes), v_star in zip(mats, v_stars):
-                pending[w] = (drv_rel, uniq_ents, boxes, v_star)
-
-        for b in range(n_blocks):
-            # ---- driver block in score-key order -----------------------
-            if driver.scan is not None:
-                driver_primary_best = kw_p * float(driver.scan.get_block(b)[0][0])
-            else:  # no numeric driver: no driver bound
-                driver_primary_best = 0.0
-            # ---- early termination check --------------------------------
-            ub = driver_primary_best + driver_other + driven_bound
-            if topk.full and ub <= topk.theta:
-                stats.early_terminated = True
-                break
-            stats.driver_blocks += 1
-            if b not in pending:
-                pending.clear()
-                _sip_prefetch(b)
-            drv_rel, uniq_ents, boxes, v_star = pending.pop(b)
-            if drv_rel.n == 0:
-                continue
-            if uniq_ents is None or len(uniq_ents) == 0:
-                continue
-            if cfg.use_sip and len(v_star) == 0:
-                continue  # nothing on the driven side can join this block
-            stats.v_star_sizes.append(len(v_star))
-            intervals, explicit = tree.filter_material(v_star)
-
-            # ---- APS plan decision --------------------------------------
-            key_needed = (topk.theta - (driver_primary_best + driver_other)
-                          - self._side_bound(driven, plan.descending, True)) \
-                if topk.full else -np.inf
-            decision = aps.choose(tree, v_star, plan.driven_cs, driven.scan,
-                                  key_needed, drv_rel.n, cfg.cost_params,
-                                  card_all)
-            chosen = cfg.force_plan or decision.plan
-            if driven.scan is None:
-                chosen = "S"
-            stats.plan_log.append(chosen)
-            if chosen == "N":
-                stats.plan_n += 1
-                dvn_rel = self._driven_nplan(driven, plan, intervals, explicit,
-                                             key_needed, stats)
-            else:
-                stats.plan_s += 1
-                dvn_rel = self._driven_splan(driven, plan, intervals, explicit,
-                                             stats)
-            if dvn_rel.n == 0:
-                continue
-
-            # ---- Phase 3: spatial join + refinement ----------------------
-            dvn_ents = np.unique(dvn_rel[driven.entity_var])
-            dvn_boxes = store.spatial_box_of(dvn_ents)
-            ok = ~np.isnan(dvn_boxes[:, 0])
-            dvn_ents, dvn_boxes = dvn_ents[ok], dvn_boxes[ok]
-            if len(dvn_ents) == 0:
-                continue
-            if cfg.mbr_join_fn is None and cfg.join_backend == "fused":
-                # streaming fused path: driven columns arrive in score-key
-                # order, each batch refined+scored+pushed before the next so
-                # the θ the kernel prunes with tightens inside the block
-                ds = self._entity_key_bound(drv_rel, uniq_ents, driver, plan)
-                vs = self._entity_key_bound(dvn_rel, dvn_ents, driven, plan)
-                for pi, pj in spatial_join.fused_stream_join(
-                        boxes, dvn_boxes, ds, vs, plan.dist_norm, k=plan.k,
-                        theta_fn=lambda: topk.theta,
-                        batch_cols=cfg.fused_batch_cols, stats=stats.join):
-                    self._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
-                                     dvn_rel, driver, driven, plan, topk,
-                                     stats, ds=ds, vs=vs)
-            else:
-                join_fn = cfg.mbr_join_fn or spatial_join.mbr_distance_join
-                pi, pj = join_fn(boxes, dvn_boxes, plan.dist_norm,
-                                 cfg.join_backend, stats.join)
-                self._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
-                                 dvn_rel, driver, driven, plan, topk, stats)
-
-        keys, rows = topk.results()
-        scores = keys if plan.descending else -keys
-        return scores, rows, stats
+    def cursor(self, q: Query) -> "QueryCursor":
+        """Steppable execution state (one driver block per step) for the
+        multi-tenant serving loop (serve/spatial.py)."""
+        return QueryCursor(self, q)
 
     # ------------------------------------------------------------------
-    def _driven_full(self, driven: SidePlan, impl: str | None) -> Relation:
+    def _driven_full(self, driven: SidePlan, impl: str | None,
+                     backend: str | None = None) -> Relation:
         """Fully-joined driven sub-query, cached per query (S-Plan is a
         full scan per the paper; only the SIP filter varies per block)."""
         # key on the pattern *contents*: id(tp) can collide after pattern
         # objects are garbage-collected, silently reusing a stale relation
-        key = ("__driven_full", impl) + tuple((tp.g, tp.s, tp.p, tp.o)
-                                              for tp in driven.all_ordered)
+        key = ("__driven_full", impl, backend) \
+            + tuple((tp.g, tp.s, tp.p, tp.o) for tp in driven.all_ordered)
         if key not in self._scan_cache:
             rel = self._cached_scan(driven.all_ordered[0])
-            rel = self._join_chain(rel, driven.all_ordered[1:], impl)
+            rel = self._join_chain(rel, driven.all_ordered[1:], impl, backend)
             self._scan_cache[key] = rel
         return self._scan_cache[key]
 
@@ -357,11 +272,21 @@ class StreakEngine:
                       explicit, stats: ExecStats) -> Relation:
         """S-Plan: spatial join pushed down -- one full scan of the driven
         sub-query (cached), then I-Range/E-list skipping of its rows."""
-        rel = self._driven_full(driven, plan.join_impl)
+        rel = self._driven_full(driven, plan.join_impl, plan.rank_backend)
         stats.driven_rows_scanned += rel.n
         if self.config.use_sip and driven.entity_var in rel:
-            rel = filter_in_ranges(rel, driven.entity_var, intervals,
-                                   explicit, impl=plan.join_impl)
+            sc, key = self.share_cache, None
+            if sc is not None:
+                key = ("splan", self._side_sig(driven, plan),
+                       intervals.tobytes(), explicit.tobytes())
+            if key is not None and key in sc:
+                rel = sc[key]
+            else:
+                rel = filter_in_ranges(rel, driven.entity_var, intervals,
+                                       explicit, impl=plan.join_impl,
+                                       backend=plan.rank_backend)
+                if key is not None:
+                    sc[key] = rel
         stats.driven_rows_after_sip += rel.n
         return rel
 
@@ -372,23 +297,41 @@ class StreakEngine:
         cfg = self.config
         parts: list[Relation] = []
         kw = self._kw(driven.primary[2], plan.descending)
+        sc = self.share_cache
+        sig = self._side_sig(driven, plan) if sc is not None else None
         for b2 in range(driven.scan.n_blocks):
             best = kw * float(driven.scan.get_block(b2)[0][0])
             if np.isfinite(key_needed) and best <= key_needed:
                 break  # no further driven block can reach the threshold
-            block_rel, _ = self._block_relation(driven, b2)
-            stats.driven_rows_scanned += block_rel.n
-            if cfg.use_sip and driven.entity_var in block_rel:
-                block_rel = filter_in_ranges(block_rel, driven.entity_var,
-                                             intervals, explicit,
-                                             impl=plan.join_impl)
-            joined = self._join_chain(block_rel, driven.join_patterns,
-                                      plan.join_impl)
-            if cfg.use_sip and driven.entity_var not in block_rel \
-                    and driven.entity_var in joined:
-                joined = filter_in_ranges(joined, driven.entity_var,
-                                          intervals, explicit,
-                                          impl=plan.join_impl)
+            # the per-block retrieval is θ-independent (only the truncation
+            # above is), so concurrent same-shape tenants share it
+            key = None
+            if sc is not None:
+                key = ("nblk", sig, b2, intervals.tobytes(),
+                       explicit.tobytes())
+            if key is not None and key in sc:
+                scanned, joined = sc[key]
+                stats.driven_rows_scanned += scanned
+            else:
+                block_rel, _ = self._block_relation(driven, b2)
+                scanned = block_rel.n
+                stats.driven_rows_scanned += scanned
+                if cfg.use_sip and driven.entity_var in block_rel:
+                    block_rel = filter_in_ranges(block_rel,
+                                                 driven.entity_var,
+                                                 intervals, explicit,
+                                                 impl=plan.join_impl,
+                                                 backend=plan.rank_backend)
+                joined = self._join_chain(block_rel, driven.join_patterns,
+                                          plan.join_impl, plan.rank_backend)
+                if cfg.use_sip and driven.entity_var not in block_rel \
+                        and driven.entity_var in joined:
+                    joined = filter_in_ranges(joined, driven.entity_var,
+                                              intervals, explicit,
+                                              impl=plan.join_impl,
+                                              backend=plan.rank_backend)
+                if key is not None:
+                    sc[key] = (scanned, joined)
             stats.driven_rows_after_sip += joined.n
             if joined.n:
                 parts.append(joined)
@@ -396,3 +339,322 @@ class StreakEngine:
             return Relation()
         cols = parts[0].keys()
         return Relation({c: np.concatenate([p[c] for p in parts]) for c in cols})
+
+
+class QueryCursor:
+    """Steppable execution state of one query: one driver block per step.
+
+    ``execute()`` is literally ``while not done: step()`` — block order, the
+    per-block θ checks, and the `sip_lookahead` prefetch window are unchanged
+    from the monolithic loop, so serial results are bit-identical to the
+    pre-cursor engine.
+
+    The serving layer (serve/spatial.py) instead drives the two-phase form:
+    ``begin_block()`` runs the early-termination check, materializes the next
+    driver block, and returns the Phase-1/2 *request* (driver boxes + CS
+    material) so the server can batch candidate-node search and node
+    selection ACROSS queries; ``finish_block(v_star, batcher)`` then runs
+    APS + driven retrieval + the Phase-3 join, optionally registering the
+    fused join with a cross-query batcher instead of streaming it alone.
+    θ pruning is sound at every granularity, so results do not depend on how
+    blocks from different queries interleave.
+    """
+
+    def __init__(self, engine: StreakEngine, q: Query):
+        self.engine = engine
+        cfg = engine.config
+        store = engine.store
+        self.tree = store.tree
+        self.plan = plan_query(store, q, force_driver=cfg.force_driver,
+                               join_impl=cfg.join_impl,
+                               rank_backend=cfg.rank_backend)
+        self.stats = ExecStats()
+        self.topk = TopK(k=self.plan.k, descending=True)  # key space
+        self.driver, self.driven = self.plan.driver, self.plan.driven
+        self.driver_other = engine._side_bound(
+            self.driver, self.plan.descending, exclude_primary=True)
+        self.driven_bound = engine._side_bound(
+            self.driven, self.plan.descending, exclude_primary=False)
+        self.kw_p = (engine._kw(self.driver.primary[2], self.plan.descending)
+                     if self.driver.primary else 0.0)
+        # per-query (block-invariant) driven-CS cardinality per tree node
+        self.card_all = self.tree.cs_stats.cardinality_all(self.plan.driven_cs)
+        # query-invariant probe material: driven-CS keys hashed once and
+        # reused by every frontier level of every window
+        self.prepared = (self.tree.bloom_self.prepare(self.plan.driven_cs)
+                         if cfg.use_sip else None)
+        self.window = max(int(cfg.sip_lookahead), 1) if cfg.use_sip else 1
+        self._drv_sig = engine._side_sig(self.driver, self.plan)
+        self.pending: dict[int, tuple] = {}  # block -> (rel, ents, boxes)
+        self._vstars: dict[int, np.ndarray] = {}   # block -> prefetched V*
+        self._win_blocks: list[int] = []     # rows of an open SIP request
+        self.n_blocks = (self.driver.scan.n_blocks
+                         if self.driver.scan is not None else 1)
+        self.b = 0
+        self.done = False
+        self._cur: tuple | None = None      # begin_block() materialization
+        if self.n_blocks == 0:
+            self._finish()
+
+    # -- lifecycle ------------------------------------------------------
+    def _finish(self) -> None:
+        self.done = True
+
+    def results(self) -> tuple[np.ndarray, Relation, ExecStats]:
+        keys, rows = self.topk.results()
+        scores = keys if self.plan.descending else -keys
+        return scores, rows, self.stats
+
+    # -- shared per-block pieces ----------------------------------------
+    def _block_guard(self, b: int) -> bool:
+        """Early-termination check; False ⟹ the query is finished."""
+        if self.driver.scan is not None:
+            dpb = self.kw_p * float(self.driver.scan.get_block(b)[0][0])
+        else:  # no numeric driver: no driver bound
+            dpb = 0.0
+        self._driver_primary_best = dpb
+        ub = dpb + self.driver_other + self.driven_bound
+        if self.topk.full and ub <= self.topk.theta:
+            self.stats.early_terminated = True
+            self._finish()
+            return False
+        return True
+
+    def _materialize(self, w: int) -> tuple:
+        """(drv_rel, uniq_ents, boxes) for driver block `w`."""
+        eng, plan, driver = self.engine, self.plan, self.driver
+        sc = eng.share_cache
+        key = ("mat", self._drv_sig, w) if sc is not None else None
+        if key is not None and key in sc:
+            return sc[key]
+        if driver.scan is not None:
+            block_rel, _ = eng._block_relation(driver, w)
+            join_chain = driver.join_patterns
+        else:  # no numeric driver: single full block
+            block_rel = eng._cached_scan(driver.all_ordered[0])
+            join_chain = driver.all_ordered[1:]
+        drv_rel = eng._join_chain(block_rel, join_chain, plan.join_impl,
+                                  plan.rank_backend)
+        uniq_ents = boxes = None
+        if drv_rel.n:
+            # driver entities with geometry
+            uniq_ents = np.unique(drv_rel[driver.entity_var])
+            boxes = eng.store.spatial_box_of(uniq_ents)
+            has_geom = ~np.isnan(boxes[:, 0])
+            uniq_ents, boxes = uniq_ents[has_geom], boxes[has_geom]
+        if key is not None:
+            sc[key] = (drv_rel, uniq_ents, boxes)
+        return drv_rel, uniq_ents, boxes
+
+    def _sip_prefetch(self, b0: int) -> None:
+        """Phases 1-2 for a `sip_lookahead` window of driver blocks: one
+        batched candidate-node search + node selection, shared Bloom-row
+        gathers and MBR tests across blocks. Speculative work past an early
+        termination cut is discarded — the per-block guard is unchanged."""
+        cfg, plan, tree = self.engine.config, self.plan, self.tree
+        mats = self._materialize_window(b0)
+        if cfg.use_sip:
+            box_sets = [bx if bx is not None else np.zeros((0, 4))
+                        for (_, _, _, bx) in mats]
+            in_v = tree.candidate_nodes(
+                box_sets, plan.dist_norm, plan.driven_cs,
+                prepared=self.prepared, probe_backend=cfg.probe_backend)
+            v_stars = node_select.select_batch(
+                tree, in_v, plan.driven_cs, cfg.select_params, self.card_all)
+            for (w, _, _, _), v_star in zip(mats, v_stars):
+                self._vstars[w] = v_star
+
+    def _materialize_window(self, b0: int) -> list[tuple]:
+        """Materialize (and cache in `pending`) a lookahead window."""
+        mats = [(w,) + self._materialize(w)
+                for w in range(b0, min(b0 + self.window, self.n_blocks))]
+        for w, drv_rel, uniq_ents, boxes in mats:
+            self.pending[w] = (drv_rel, uniq_ents, boxes)
+        return mats
+
+    def _process(self, drv_rel, uniq_ents, boxes, v_star,
+                 batcher=None) -> None:
+        """APS + driven retrieval + Phase-3 join for one materialized block.
+
+        With `batcher` (serve mode, fused backend) the streaming join is
+        REGISTERED with the cross-query batcher instead of running here —
+        the batcher's emit callback refines + scores + pushes into this
+        cursor's TopK so θ tightens between shared kernel launches.
+        """
+        eng = self.engine
+        cfg, plan, tree = eng.config, self.plan, self.tree
+        driver, driven = self.driver, self.driven
+        topk, stats = self.topk, self.stats
+        if cfg.use_sip and len(v_star) == 0:
+            return  # nothing on the driven side can join this block
+        stats.v_star_sizes.append(len(v_star))
+        intervals, explicit = tree.filter_material(v_star)
+
+        # ---- APS plan decision --------------------------------------
+        key_needed = (topk.theta
+                      - (self._driver_primary_best + self.driver_other)
+                      - eng._side_bound(driven, plan.descending, True)) \
+            if topk.full else -np.inf
+        decision = aps.choose(tree, v_star, plan.driven_cs, driven.scan,
+                              key_needed, drv_rel.n, cfg.cost_params,
+                              self.card_all)
+        chosen = cfg.force_plan or decision.plan
+        if driven.scan is None:
+            chosen = "S"
+        stats.plan_log.append(chosen)
+        if chosen == "N":
+            stats.plan_n += 1
+            dvn_rel = eng._driven_nplan(driven, plan, intervals, explicit,
+                                        key_needed, stats)
+        else:
+            stats.plan_s += 1
+            dvn_rel = eng._driven_splan(driven, plan, intervals, explicit,
+                                        stats)
+        if dvn_rel.n == 0:
+            return
+
+        # ---- Phase 3: spatial join + refinement ----------------------
+        dvn_ents = np.unique(dvn_rel[driven.entity_var])
+        dvn_boxes = eng.store.spatial_box_of(dvn_ents)
+        ok = ~np.isnan(dvn_boxes[:, 0])
+        dvn_ents, dvn_boxes = dvn_ents[ok], dvn_boxes[ok]
+        if len(dvn_ents) == 0:
+            return
+        if cfg.mbr_join_fn is None and cfg.join_backend == "fused":
+            # streaming fused path: driven columns arrive in score-key
+            # order, each batch refined+scored+pushed before the next so
+            # the θ the kernel prunes with tightens inside the block
+            ds = eng._entity_key_bound(drv_rel, uniq_ents, driver, plan)
+            vs = eng._entity_key_bound(dvn_rel, dvn_ents, driven, plan)
+
+            def emit(pi, pj):
+                eng._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
+                                dvn_rel, driver, driven, plan, topk,
+                                stats, ds=ds, vs=vs)
+
+            if batcher is not None:
+                batcher.add(spatial_join.StreamEntry(
+                    boxes, dvn_boxes, ds, vs, plan.dist_norm, plan.k,
+                    theta_fn=lambda: topk.theta, emit=emit,
+                    stats=stats.join))
+                return
+            for pi, pj in spatial_join.fused_stream_join(
+                    boxes, dvn_boxes, ds, vs, plan.dist_norm, k=plan.k,
+                    theta_fn=lambda: topk.theta,
+                    batch_cols=cfg.fused_batch_cols, stats=stats.join,
+                    tuner=eng.kcap_tuner):
+                emit(pi, pj)
+        else:
+            join_fn = cfg.mbr_join_fn or spatial_join.mbr_distance_join
+            # the MBR pair set is pure in (boxes, driven boxes, distance),
+            # so same-shape tenants share it too; a cache hit skips the
+            # per-launch JoinStats counters (they count work done, and a
+            # hit does none)
+            sc = eng.share_cache
+            key = None
+            if sc is not None and cfg.mbr_join_fn is None:
+                key = ("mbr", cfg.join_backend, boxes.shape,
+                       dvn_boxes.shape, boxes.tobytes(),
+                       dvn_boxes.tobytes(), float(plan.dist_norm))
+            if key is not None and key in sc:
+                pi, pj = sc[key]
+            else:
+                pi, pj = join_fn(boxes, dvn_boxes, plan.dist_norm,
+                                 cfg.join_backend, stats.join)
+                if key is not None:
+                    sc[key] = (pi, pj)
+            eng._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
+                            dvn_rel, driver, driven, plan, topk, stats)
+
+    # -- serial mode ----------------------------------------------------
+    def step(self) -> None:
+        """Advance one driver block (internal lookahead SIP prefetch)."""
+        if self.done:
+            return
+        b = self.b
+        if not self._block_guard(b):
+            return
+        self.stats.driver_blocks += 1
+        if b not in self.pending:
+            self.pending.clear()
+            self._vstars.clear()
+            self._sip_prefetch(b)
+        drv_rel, uniq_ents, boxes = self.pending.pop(b)
+        v_star = self._vstars.pop(b, np.array([0], dtype=np.int64))
+        self.b += 1
+        if drv_rel.n and uniq_ents is not None and len(uniq_ents):
+            self._process(drv_rel, uniq_ents, boxes, v_star)
+        if self.b >= self.n_blocks:
+            self._finish()
+
+    # -- serve mode (two-phase step) ------------------------------------
+    def begin_block(self) -> dict | None:
+        """Advance to the next live block and materialize it (serve mode).
+
+        Returns None when the cursor is finished, else a Phase-1/2 request
+        the serving engine batches across queries::
+
+            {"boxes": [(M_i, 4) driver MBRs, ...], "driven_cs": (C,) int64,
+             "prepared": PreparedKeys, "dist_norm": float,
+             "card_all": (N,) float64, "need_sip": bool}
+
+        ``boxes`` covers this block plus the cursor's `sip_lookahead`
+        speculative window (one row per block), so each tenant keeps the
+        serial path's amortization — one shared frontier pass per refill —
+        while the server pools rows across tenants. On steps served from
+        the window cache ``need_sip`` is False and ``boxes`` is empty.
+
+        Follow with ``finish_block(v_stars, batcher)`` where ``v_stars`` is
+        the per-row V* list for this request (None when ``need_sip`` was
+        False).
+        """
+        assert self._cur is None, "finish_block() the previous block first"
+        while not self.done:
+            b = self.b
+            if not self._block_guard(b):
+                return None
+            self.stats.driver_blocks += 1
+            self.b += 1
+            if b not in self.pending:
+                self.pending.clear()
+                self._vstars.clear()
+                self._materialize_window(b)
+            drv_rel, uniq_ents, boxes = self.pending.pop(b)
+            if drv_rel.n and uniq_ents is not None and len(uniq_ents):
+                self._cur = (b, drv_rel, uniq_ents, boxes)
+                need_sip = (bool(self.engine.config.use_sip)
+                            and b not in self._vstars)
+                if need_sip:
+                    self._win_blocks = [b] + sorted(self.pending)
+                    win_boxes = [boxes] + [
+                        self.pending[w][2] if self.pending[w][2] is not None
+                        else np.zeros((0, 4)) for w in sorted(self.pending)]
+                else:
+                    self._win_blocks, win_boxes = [], []
+                return {"boxes": win_boxes,
+                        "driven_cs": self.plan.driven_cs,
+                        "prepared": self.prepared,
+                        "dist_norm": self.plan.dist_norm,
+                        "card_all": self.card_all,
+                        "need_sip": need_sip}
+            if self.b >= self.n_blocks:
+                self._finish()
+        return None
+
+    def finish_block(self, v_stars: list | None, batcher=None) -> None:
+        """Run Phases 2'-3 for the block begin_block() materialized.
+
+        ``v_stars`` aligns with the request's ``boxes`` rows; rows past the
+        first are the speculative window and are cached for later steps.
+        """
+        assert self._cur is not None, "begin_block() first"
+        b, drv_rel, uniq_ents, boxes = self._cur
+        self._cur = None
+        if v_stars is not None:
+            for w, v in zip(self._win_blocks, v_stars):
+                self._vstars[w] = v
+            self._win_blocks = []
+        v_star = self._vstars.pop(b, np.array([0], dtype=np.int64))
+        self._process(drv_rel, uniq_ents, boxes, v_star, batcher=batcher)
+        if self.b >= self.n_blocks:
+            self._finish()

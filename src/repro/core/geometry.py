@@ -62,9 +62,14 @@ class Extent:
 
         The spatial filter ``distance(a, b) < d`` is evaluated in world units
         during refinement; the normalized distance is only used for
-        conservative MBR pruning, so we take the *smaller* scale to stay safe.
+        conservative MBR pruning, so we take the *smaller* scale to stay
+        safe: normalization is anisotropic (x / width, y / height), and a
+        world distance d spans up to d / min(width, height) in normalized
+        space. Dividing by the larger span under-covers the other axis and
+        prunes qualifying boundary pairs (caught by the differential query
+        fuzzer on anisotropic extents).
         """
-        return d_world / max(self.width, self.height)
+        return d_world / min(self.width, self.height)
 
 
 def point_boxes(xy: np.ndarray) -> np.ndarray:

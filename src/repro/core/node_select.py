@@ -36,9 +36,18 @@ def node_costs_base(tree: SQuadTree, driven_cs: np.ndarray,
                     params: SelectParams,
                     card_all: np.ndarray | None = None
                     ) -> tuple[np.ndarray, np.ndarray]:
-    """Block-invariant (base_cost, xi) per node; cost(a) = base where a ∈ V."""
+    """Block-invariant (base_cost, xi) per node; cost(a) = base where a ∈ V.
+
+    Multi-query form: `driven_cs` may be a list of per-block CS arrays (or
+    `card_all` a precomputed ``(B, N)`` stack) — `base` then carries one
+    cost row per block; `xi` stays CS-independent.
+    """
     if card_all is None:
-        card_all = tree.cs_stats.cardinality_all(driven_cs)
+        if isinstance(driven_cs, (list, tuple)):
+            card_all = np.stack([tree.cs_stats.cardinality_all(c)
+                                 for c in driven_cs])
+        else:
+            card_all = tree.cs_stats.cardinality_all(driven_cs)
     el = tree.elist_size(np.arange(tree.n_nodes)).astype(np.float64)
     base = params.alpha_io * card_all + params.alpha_cpu * el
     xi = params.alpha_merge * el
@@ -71,6 +80,10 @@ def select_batch(tree: SQuadTree, in_v: np.ndarray, driven_cs: np.ndarray,
     vectorized top-down per-level sweep instead of a python stack walk.
     Returns a list of B sorted node-index arrays, bit-identical to the
     looped oracle applied per block.
+
+    Multi-query form: pass `driven_cs` as a list of per-block CS arrays, or
+    `card_all` as a precomputed ``(B, N)`` stack — each block's DP then runs
+    under its own query's cost row (the serving layer's cross-query batch).
     """
     in_v = np.atleast_2d(np.asarray(in_v, dtype=bool))
     n_b, n = in_v.shape
@@ -98,7 +111,8 @@ def select_batch(tree: SQuadTree, in_v: np.ndarray, driven_cs: np.ndarray,
     rank[ridx] = np.arange(n_r)
 
     in_v_r = in_v[:, ridx]                          # (B, R)
-    cost = np.where(in_v_r, base[ridx][None], 0.0)
+    base_r = base[:, ridx] if base.ndim == 2 else base[ridx][None]
+    cost = np.where(in_v_r, base_r, 0.0)
     xi_r = xi[ridx]
     sigma = np.zeros((n_b, n_r))                    # sigma*(a)
     xistar = np.zeros((n_b, n_r))                   # xi*(a)

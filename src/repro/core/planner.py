@@ -70,6 +70,8 @@ class QueryPlan:
     # once at plan time so per-block APS plan switches (core/aps.py) reuse
     # it with zero extra dispatch cost
     join_impl: str = "merge"
+    # merge-join rank-pass backend (kernels/ops.RANK_BACKENDS); None = auto
+    rank_backend: str | None = None
 
 
 def resolve_spatial_vars(store: QuadStore, q: Query) -> tuple[str, str]:
@@ -145,7 +147,8 @@ def _build_side(store: QuadStore, patterns: list, entity_var: str,
 
 def plan_query(store: QuadStore, q: Query,
                force_driver: str | None = None,
-               join_impl: str | None = None) -> QueryPlan:
+               join_impl: str | None = None,
+               rank_backend: str | None = None) -> QueryPlan:
     assert q.spatial is not None, "plan_query expects a spatial top-k query"
     var_a, var_b = resolve_spatial_vars(store, q)
     patterns = list(q.patterns)
@@ -188,4 +191,5 @@ def plan_query(store: QuadStore, q: Query,
                      dist_world=q.spatial.dist, dist_norm=dist_norm,
                      metric=q.spatial.metric, driven_cs=driven_cs,
                      descending=descending, k=q.k,
-                     join_impl=resolve_join_impl(join_impl))
+                     join_impl=resolve_join_impl(join_impl),
+                     rank_backend=rank_backend)

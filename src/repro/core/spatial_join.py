@@ -34,6 +34,48 @@ class JoinStats:
     refined: int = 0          # pairs surviving exact refinement
     pairs_tested: int = 0     # full MBR pairs evaluated (block product)
     refine_skipped: int = 0   # candidate pairs never refined (θ-aware skip)
+    overflow_rows: int = 0    # driver rows recovered densely (partial width
+    #                           overflow in the fused kernel)
+    overflow_batches: int = 0  # column batches with >= 1 overflowing row
+
+
+@dataclasses.dataclass
+class KcapTuner:
+    """EWMA autotuner for the fused kernel's per-row partial width.
+
+    The fixed ``min(max(k, 64), batch_cols)`` floor pays worst-case partial
+    widths on every launch even when θ has tightened enough that almost no
+    pairs survive. The tuner tracks an EWMA of the observed per-launch MAX
+    survivor count and suggests ``headroom`` times that, quantized to the
+    next power of two (bounding jit recompiles to one per pow2 class) and
+    clamped to ``[max(k, floor), min(ceiling, batch_cols)]``. Undershooting
+    a survivor burst is *safe* — overflowing rows are recovered densely by
+    the caller (see fused_stream_join) — it only costs recompute, which
+    JoinStats.overflow_* makes observable.
+    """
+    alpha: float = 0.25       # EWMA smoothing weight for the newest sample
+    headroom: float = 1.5     # width multiplier over the smoothed max
+    floor: int = 8            # never suggest below this (absent a larger k)
+    ceiling: int = 1024       # never suggest above this
+    ewma: float | None = None
+
+    def update(self, counts: np.ndarray) -> None:
+        """Fold one launch's per-row survivor counts into the EWMA."""
+        if len(counts) == 0:
+            return
+        obs = float(np.max(counts))
+        self.ewma = obs if self.ewma is None else (
+            self.alpha * obs + (1.0 - self.alpha) * self.ewma)
+
+    def suggest(self, k: int, batch_cols: int) -> int:
+        if self.ewma is None:               # cold start: the old fixed floor
+            width = max(int(k), 64)
+        else:
+            width = int(np.ceil(self.ewma * self.headroom))
+        width = max(width, int(k), self.floor)
+        width = 1 << max(int(width - 1).bit_length(), 0)   # next pow2
+        return int(max(min(width, self.ceiling, batch_cols),
+                       min(self.floor, batch_cols)))
 
 
 def mbr_distance_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
@@ -107,7 +149,8 @@ def fused_stream_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
                       dist_norm: float, k: int,
                       theta_fn=None, batch_cols: int = 4096,
                       interpret: bool | None = None,
-                      stats: JoinStats | None = None):
+                      stats: JoinStats | None = None,
+                      tuner: KcapTuner | None = None):
     """Streaming Phase-3 join: yields (pi, pj) candidate batches.
 
     Driven entities are processed in descending score-key order, one
@@ -139,9 +182,6 @@ def fused_stream_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
     dvn_sorted = np.ascontiguousarray(driven_boxes[order], dtype=np.float32)
     vs_sorted = vs[order]
     drv = np.ascontiguousarray(driver_boxes, dtype=np.float32)
-    # partial width: a floor above k keeps the (rare but expensive) dense
-    # overflow recovery off the common path when θ is still loose
-    kcap = min(max(int(k), 64), batch_cols)
 
     for start in range(0, n, batch_cols):
         theta = float(theta_fn()) if theta_fn is not None else -np.inf
@@ -149,6 +189,12 @@ def fused_stream_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
         # cannot beat theta, and keys only decrease from here
         if ds_max + float(vs_sorted[start]) <= theta:
             break
+        # partial width: autotuned from observed survivor counts when a
+        # tuner is threaded through; otherwise the fixed floor above k
+        # keeps the (rare but expensive) dense overflow recovery off the
+        # common path when θ is still loose
+        kcap = (tuner.suggest(int(k), batch_cols) if tuner is not None
+                else min(max(int(k), 64), batch_cols))
         theta32 = _theta32_lower(theta)
         chunk = dvn_sorted[start:start + batch_cols]
         ck = vs_sorted[start:start + batch_cols]
@@ -157,6 +203,8 @@ def fused_stream_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
             interpret=interpret)
         idx = np.asarray(idx)
         counts = np.asarray(counts)
+        if tuner is not None:
+            tuner.update(counts)
         if stats is not None:
             stats.pairs_tested += m * len(chunk)
 
@@ -169,6 +217,9 @@ def fused_stream_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
             # width overflow: recover those rows densely — same f32 arrays,
             # same f32 distance formula and θ the kernel used, so recovered
             # rows see exactly the kernel's predicate
+            if stats is not None:
+                stats.overflow_rows += len(over)
+                stats.overflow_batches += 1
             d = np.asarray(kops.distance_join_matrix(
                 drv[over], chunk, interpret=interpret))
             bound = ds[over][:, None] + ck[None, :]
@@ -184,6 +235,167 @@ def fused_stream_join(driver_boxes: np.ndarray, driven_boxes: np.ndarray,
         if stats is not None:
             stats.candidates += len(pi)
         yield pi, pj
+
+
+@dataclasses.dataclass
+class StreamEntry:
+    """One query's Phase-3 work registered with fused_stream_join_multi.
+
+    `emit(pi, pj)` receives candidate-pair batches (indices into the
+    original driver/driven arrays) and is expected to refine + push them
+    into the query's TopK so the next `theta_fn()` read is tighter.
+    """
+    driver_boxes: np.ndarray
+    driven_boxes: np.ndarray
+    driver_keys: np.ndarray
+    driven_keys: np.ndarray
+    dist_norm: float
+    k: int
+    theta_fn: object                  # () -> float, the query's live θ
+    emit: object                      # (pi, pj) -> None
+    stats: JoinStats | None = None
+
+
+def fused_stream_join_multi(entries: list[StreamEntry],
+                            batch_cols: int = 4096,
+                            interpret: bool | None = None,
+                            tuner: KcapTuner | None = None) -> int:
+    """Cross-query streaming Phase-3 join: several queries' driver blocks in
+    ONE kernel grid per launch.
+
+    Each entry is the per-query state fused_stream_join would process alone;
+    here the driver rows of all live entries are concatenated (tagged with a
+    per-row query id, distance threshold, and θ) and each launch takes the
+    next ≈ batch_cols / n_live columns from EVERY live entry's key-sorted
+    driven side. The kernel's query-id mask keeps pairs within their query,
+    so per-query results are bit-identical to running fused_stream_join
+    serially: same column order, same θ reads at batch granularity, same
+    dense overflow recovery per (query, batch).
+
+    Entries retire independently — when a query's remaining key bound cannot
+    beat its θ (or its columns are exhausted) its rows leave the launch and
+    the survivors' column share grows. Returns the number of kernel
+    launches (the bench asserts batching actually happened).
+    """
+    from ..kernels import ops as kops
+
+    class _Cur:
+        def __init__(self, e: StreamEntry):
+            self.e = e
+            self.m = len(e.driver_boxes)
+            self.n = len(e.driven_boxes)
+            self.ds = _sanitize_keys(e.driver_keys, self.m)
+            vs = _sanitize_keys(e.driven_keys, self.n)
+            self.ds_max = float(self.ds.max()) if self.m else -np.inf
+            self.order = np.argsort(-vs, kind="stable")
+            self.dvn = np.ascontiguousarray(e.driven_boxes[self.order],
+                                            dtype=np.float32)
+            self.vs = vs[self.order]
+            self.drv = np.ascontiguousarray(e.driver_boxes,
+                                            dtype=np.float32)
+            self.pos = 0
+
+        def live(self) -> bool:
+            if self.m == 0 or self.pos >= self.n:
+                return False
+            theta = float(self.e.theta_fn())
+            return self.ds_max + float(self.vs[self.pos]) > theta
+
+    curs = [_Cur(e) for e in entries]
+    launches = 0
+    while True:
+        live = [c for c in curs if c.live()]
+        if not live:
+            break
+        cols_per = max(1, batch_cols // len(live))
+        kmax = max(int(c.e.k) for c in live)
+        kcap = (tuner.suggest(kmax, batch_cols) if tuner is not None
+                else min(max(kmax, 64), batch_cols))
+        # pow2-quantize so retiring entries (shrinking kmax) don't force a
+        # fresh jit signature per launch
+        kcap = min(1 << max(int(kcap - 1).bit_length(), 0), batch_cols)
+        # assemble the launch: driver rows / driven columns of every live
+        # query, tagged with qid + per-row (dist, θ)
+        drv_l, ds_l, rq_l, dist_l, th_l = [], [], [], [], []
+        col_l, ck_l, cq_l = [], [], []
+        spans = []                       # (cur, row_off, col_off, ncols, θ32)
+        row_off = col_off = 0
+        for qid, c in enumerate(live):
+            ncols = min(cols_per, c.n - c.pos)
+            theta32 = _theta32_lower(float(c.e.theta_fn()))
+            drv_l.append(c.drv)
+            ds_l.append(c.ds)
+            rq_l.append(np.full(c.m, qid, np.int32))
+            dist_l.append(np.full(c.m, np.float32(c.e.dist_norm)))
+            th_l.append(np.full(c.m, theta32))
+            col_l.append(c.dvn[c.pos:c.pos + ncols])
+            ck_l.append(c.vs[c.pos:c.pos + ncols])
+            cq_l.append(np.full(ncols, qid, np.int32))
+            spans.append((c, row_off, col_off, ncols, theta32))
+            row_off += c.m
+            col_off += ncols
+        # pad rows/columns up to pow2 buckets with sentinel qids (-1 rows
+        # never match -2 columns, dist=-1 kills the distance predicate) so
+        # per-step size drift — queries retiring, column shares growing —
+        # reuses a handful of jit signatures instead of compiling each launch
+        m_tot, n_tot = row_off, col_off
+        m_pad = max(128, 1 << int(m_tot - 1).bit_length()) - m_tot
+        n_pad = max(128, 1 << int(n_tot - 1).bit_length()) - n_tot
+        if m_pad:
+            drv_l.append(np.zeros((m_pad, 4), np.float32))
+            ds_l.append(np.full(m_pad, -np.inf, np.float32))
+            rq_l.append(np.full(m_pad, -1, np.int32))
+            dist_l.append(np.full(m_pad, -1.0, np.float32))
+            th_l.append(np.full(m_pad, np.inf, np.float32))
+        if n_pad:
+            col_l.append(np.zeros((n_pad, 4), np.float32))
+            ck_l.append(np.full(n_pad, -np.inf, np.float32))
+            cq_l.append(np.full(n_pad, -2, np.int32))
+        scores, idx, counts = kops.fused_topk_join(
+            np.concatenate(drv_l), np.concatenate(col_l),
+            np.concatenate(ds_l), np.concatenate(ck_l),
+            np.concatenate(dist_l), np.concatenate(th_l), k=kcap,
+            row_qid=np.concatenate(rq_l), col_qid=np.concatenate(cq_l),
+            interpret=interpret)
+        idx = np.asarray(idx)
+        counts = np.asarray(counts)
+        launches += 1
+        if tuner is not None:
+            tuner.update(counts)
+        for c, r0, c0, ncols, theta32 in spans:
+            e = c.e
+            eidx = idx[r0:r0 + c.m]
+            ecnt = counts[r0:r0 + c.m]
+            if e.stats is not None:
+                e.stats.pairs_tested += c.m * ncols
+            ok_rows = ecnt <= kcap
+            sel = (eidx >= 0) & ok_rows[:, None]
+            pi = np.nonzero(sel)[0].astype(np.int64)
+            # qid masking confines survivors to this entry's column span
+            pj_local = eidx[sel].astype(np.int64) - c0
+            over = np.flatnonzero(~ok_rows)
+            if len(over):
+                if e.stats is not None:
+                    e.stats.overflow_rows += len(over)
+                    e.stats.overflow_batches += 1
+                chunk = c.dvn[c.pos:c.pos + ncols]
+                ck = c.vs[c.pos:c.pos + ncols]
+                d = np.asarray(kops.distance_join_matrix(
+                    c.drv[over], chunk, interpret=interpret))
+                bound = c.ds[over][:, None] + ck[None, :]
+                oi, oj = np.nonzero((d <= np.float32(e.dist_norm))
+                                    & (bound > theta32))
+                pi = np.concatenate([pi, over[oi].astype(np.int64)])
+                pj_local = np.concatenate([pj_local, oj.astype(np.int64)])
+            if len(pi):
+                pj = c.order[c.pos + pj_local]
+                srt = np.lexsort((pj, pi))
+                pi, pj = pi[srt], pj[srt]
+                if e.stats is not None:
+                    e.stats.candidates += len(pi)
+                e.emit(pi, pj)
+            c.pos += ncols
+    return launches
 
 
 def fused_topk_pairs(driver_boxes: np.ndarray, driven_boxes: np.ndarray,

@@ -163,12 +163,49 @@ class SQuadTree:
         `BloomBank.prepare`); `probe_backend` routes the Bloom probes through
         the Pallas `bloom_probe` kernel or the numpy oracle
         (`charsets.PROBE_BACKENDS`).
+
+        Multi-query form (the serving layer): `driven_cs` may be a LIST of
+        per-block CS arrays (one per batch row, from different queries), with
+        `prepared` an aligned list (or None) and `dist_norm` a scalar or a
+        per-block ``(B,)`` array. Blocks whose CS sets are identical share
+        one frontier pass (Bloom-probe sharing is only valid within such a
+        group); per-block results are bit-identical to separate calls.
         """
-        single = isinstance(driver_boxes, np.ndarray) and driver_boxes.ndim == 2
-        boxes = driver_boxes[None] if single else _pad_box_sets(driver_boxes)
         bank = {"self": self.bloom_self, "in": self.bloom_in,
                 "out": self.bloom_out}[which]
-        driven_cs = np.asarray(driven_cs, dtype=np.int64)
+        if isinstance(driven_cs, (list, tuple)):
+            boxes = _pad_box_sets(driver_boxes)
+            n_b = len(boxes)
+            if len(driven_cs) != n_b:
+                raise ValueError("driven_cs list must match the block batch")
+            dist_arr = np.broadcast_to(
+                np.asarray(dist_norm, dtype=np.float64), (n_b,))
+            prep = (list(prepared) if prepared is not None else [None] * n_b)
+            cs_arrs = [np.asarray(c, dtype=np.int64) for c in driven_cs]
+            out = np.zeros((n_b, self.n_nodes), dtype=bool)
+            groups: dict[bytes, list[int]] = {}
+            for i, c in enumerate(cs_arrs):
+                groups.setdefault(c.tobytes(), []).append(i)
+            for sel in groups.values():
+                si = np.asarray(sel, dtype=np.int64)
+                out[si] = self._frontier(boxes[si], dist_arr[si],
+                                         cs_arrs[sel[0]], bank,
+                                         prep[sel[0]], probe_backend)
+            return out
+        single = isinstance(driver_boxes, np.ndarray) and driver_boxes.ndim == 2
+        boxes = driver_boxes[None] if single else _pad_box_sets(driver_boxes)
+        in_v = self._frontier(boxes, dist_norm,
+                              np.asarray(driven_cs, dtype=np.int64),
+                              bank, prepared, probe_backend)
+        return in_v[0] if single else in_v
+
+    def _frontier(self, boxes: np.ndarray, dist_norm, driven_cs: np.ndarray,
+                  bank: BloomBank, prepared: PreparedKeys | None,
+                  probe_backend: str | None) -> np.ndarray:
+        """The batched level-synchronous frontier over one shared CS set.
+
+        boxes (B, M, 4) NaN-padded; dist_norm scalar or per-block (B,).
+        """
         n_b = len(boxes)
         in_v = np.zeros((n_b, self.n_nodes), dtype=bool)
         if n_b and len(driven_cs) and boxes.shape[1]:
@@ -176,7 +213,9 @@ class SQuadTree:
                     or prepared.k != bank.k \
                     or not np.array_equal(prepared.keys, driven_cs):
                 prepared = bank.prepare(driven_cs)
-            expanded = geometry.expand_boxes(boxes, dist_norm)  # (B, M, 4)
+            d = (dist_norm if np.ndim(dist_norm) == 0
+                 else np.asarray(dist_norm, dtype=np.float64)[:, None])
+            expanded = geometry.expand_boxes(boxes, d)          # (B, M, 4)
             # Flat (block, node, box) triple frontier — a simultaneous
             # descent of every block's expanded driver boxes down the tree.
             # Because child MBRs nest inside their parent's (clipped unions
@@ -232,7 +271,7 @@ class SQuadTree:
                 tb = np.concatenate([p[0] for p in parts])
                 tn = np.concatenate([p[1] for p in parts])
                 tx = np.concatenate([p[2] for p in parts])
-        return in_v[0] if single else in_v
+        return in_v
 
     def candidate_nodes_looped(self, driver_boxes: np.ndarray,
                                dist_norm: float, driven_cs: np.ndarray,
@@ -505,7 +544,12 @@ def radius_join(points_a: np.ndarray, points_b: np.ndarray, radius: float,
     ext = Extent.of(geometry.point_boxes(both))
     na = ext.normalize(geometry.point_boxes(pa))[:, :2]
     nb = ext.normalize(geometry.point_boxes(pb))[:, :2]
-    r_norm = radius / max(ext.width, ext.height)
+    # normalization is anisotropic (x / width, y / height): a radius-length
+    # offset spans up to radius / min(width, height) normalized units, and
+    # the ±1-cell neighborhood is only complete when one cell covers that
+    # (radius / max undersizes cells on the narrower axis and drops
+    # boundary pairs — caught by the differential query fuzzer)
+    r_norm = radius / min(ext.width, ext.height)
     level = int(np.clip(np.floor(-np.log2(max(r_norm, 1e-9))), 0, 16))
     cell_b = morton.cell_of(nb, level)
     nside = 1 << level

@@ -66,8 +66,8 @@ def _select_topk(cat_s: jnp.ndarray, cat_i: jnp.ndarray, k: int
     return out_s, out_i
 
 
-def _kernel(dist_ref, theta_ref, a_ref, ak_ref, b_ref, bk_ref,
-            s_ref, i_ref, c_ref, *, bn: int, k: int):
+def _kernel(dist_ref, theta_ref, a_ref, ak_ref, aq_ref, b_ref, bk_ref,
+            bq_ref, s_ref, i_ref, c_ref, *, bn: int, k: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -86,7 +86,11 @@ def _kernel(dist_ref, theta_ref, a_ref, ak_ref, b_ref, bk_ref,
     d = jnp.sqrt(dx * dx + dy * dy)                 # (bm, bn)
 
     bound = ak_ref[...] + bk_ref[...][:, 0].reshape(1, -1)   # (bm, bn)
-    valid = (d <= dist_ref[0, 0]) & (bound > theta_ref[0, 0])
+    # per-ROW distance/theta (multi-query launches carry one per driver row)
+    # and query-id masking: a pair only survives when driver and driven rows
+    # belong to the same query
+    same_q = aq_ref[...] == bq_ref[...][:, 0].reshape(1, -1)  # (bm, bn)
+    valid = (d <= dist_ref[...]) & (bound > theta_ref[...]) & same_q
     col = (jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
            + j * bn)                                # global driven index
     tile_s = jnp.where(valid, bound, NEG_INF)
@@ -107,6 +111,8 @@ def fused_topk_join(driver: jnp.ndarray, driven: jnp.ndarray,
                     driver_keys: jnp.ndarray, driven_keys: jnp.ndarray,
                     dist, theta, k: int = 64,
                     bm: int = 128, bn: int = 128,
+                    row_qid: jnp.ndarray | None = None,
+                    col_qid: jnp.ndarray | None = None,
                     interpret: bool = False
                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Streaming per-row top-k distance join.
@@ -114,7 +120,12 @@ def fused_topk_join(driver: jnp.ndarray, driven: jnp.ndarray,
     driver (M, 4) / driven (N, 4) MBRs; driver_keys (M,) / driven_keys (N,)
     per-entity score-key upper bounds (use 0 for a pure distance join, -inf
     to exclude an entity). `dist` and `theta` may be traced scalars — θ
-    changes between tile batches without recompiling.
+    changes between tile batches without recompiling — or per-driver-row
+    ``(M,)`` arrays, which is how a multi-query launch carries each query's
+    own distance threshold and top-k state (serve/spatial.py). `row_qid` /
+    `col_qid` are optional int32 query ids: when given, pairs whose driver
+    row and driven column belong to different queries are masked out, so
+    several queries' blocks share one kernel grid.
 
     Returns (scores (M, k) f32, idx (M, k) int32, counts (M,) int32): per
     driver row the k best surviving pairs by key bound (padded with
@@ -132,18 +143,34 @@ def fused_topk_join(driver: jnp.ndarray, driven: jnp.ndarray,
                  constant_values=NEG_INF).reshape(-1, 1)
     vk = jnp.pad(driven_keys.astype(jnp.float32), (0, np_ - n),
                  constant_values=NEG_INF).reshape(-1, 1)
-    dist_arr = jnp.full((1, 1), dist, dtype=jnp.float32)
-    theta_arr = jnp.full((1, 1), theta, dtype=jnp.float32)
+    # scalar dist/theta broadcast to per-row columns; padded rows keep their
+    # -inf key, so their dist/theta values are irrelevant
+    dist_arr = jnp.pad(jnp.broadcast_to(
+        jnp.asarray(dist, dtype=jnp.float32), (m,)), (0, mp - m)
+    ).reshape(-1, 1)
+    theta_arr = jnp.pad(jnp.broadcast_to(
+        jnp.asarray(theta, dtype=jnp.float32), (m,)), (0, mp - m)
+    ).reshape(-1, 1)
+    # absent qids = everything is query 0; pads get -1 / -2 so a padded row
+    # can never match a padded column either
+    rq = (jnp.zeros(m, jnp.int32) if row_qid is None
+          else row_qid.astype(jnp.int32))
+    cq = (jnp.zeros(n, jnp.int32) if col_qid is None
+          else col_qid.astype(jnp.int32))
+    rq = jnp.pad(rq, (0, mp - m), constant_values=-1).reshape(-1, 1)
+    cq = jnp.pad(cq, (0, np_ - n), constant_values=-2).reshape(-1, 1)
     grid = (mp // bm, np_ // bn)
     scores, idx, counts = pl.pallas_call(
         functools.partial(_kernel, bn=bn, k=k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((bm, 4), lambda i, j: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
             pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
         ],
         out_specs=[
@@ -157,5 +184,5 @@ def fused_topk_join(driver: jnp.ndarray, driven: jnp.ndarray,
             jax.ShapeDtypeStruct((mp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(dist_arr, theta_arr, drv, dk, dvn, vk)
+    )(dist_arr, theta_arr, drv, dk, rq, dvn, vk, cq)
     return scores[:m], idx[:m], counts[:m, 0]

@@ -42,30 +42,45 @@ def distance_join_mask(driver, driven, dist: float,
 
 
 def fused_topk_join(driver, driven, driver_keys, driven_keys,
-                    dist: float, theta: float, k: int = 64,
+                    dist, theta, k: int = 64,
+                    row_qid=None, col_qid=None,
                     interpret: bool | None = None):
     """Streaming per-row top-k distance join; see kernels/fused_topk_join.py.
 
-    Returns (scores (M, k), idx (M, k), counts (M,)) — the per-row partials
-    the `fused` join backend consumes. On CPU without interpret mode this
-    runs the dense jnp oracle (still per column *batch* when called through
+    `dist` / `theta` may be scalars or per-driver-row (M,) arrays; `row_qid`
+    / `col_qid` optional int32 query ids mask cross-query pairs so several
+    queries' blocks share one launch (serve/spatial.py). Returns
+    (scores (M, k), idx (M, k), counts (M,)) — the per-row partials the
+    `fused` join backend consumes. On CPU without interpret mode this runs
+    the dense jnp oracle (still per column *batch* when called through
     core/spatial_join.py, so peak memory stays independent of total N).
     """
     driver = jnp.asarray(driver, dtype=jnp.float32)
     driven = jnp.asarray(driven, dtype=jnp.float32)
     dk = jnp.asarray(driver_keys, dtype=jnp.float32)
     vk = jnp.asarray(driven_keys, dtype=jnp.float32)
+    m, n = driver.shape[0], driven.shape[0]
+    # one jit signature for scalar and per-row callers: always materialize
+    # the per-row threshold columns and the qid planes
+    dist_arr = jnp.broadcast_to(jnp.asarray(dist, dtype=jnp.float32), (m,))
+    theta_arr = jnp.broadcast_to(jnp.asarray(theta, dtype=jnp.float32), (m,))
+    rq = (jnp.zeros(m, jnp.int32) if row_qid is None
+          else jnp.asarray(row_qid, dtype=jnp.int32))
+    cq = (jnp.zeros(n, jnp.int32) if col_qid is None
+          else jnp.asarray(col_qid, dtype=jnp.int32))
     if _on_tpu() or interpret:
         return _ftj.fused_topk_join(
-            driver, driven, dk, vk, dist, theta, k=k,
+            driver, driven, dk, vk, dist_arr, theta_arr, k=k,
+            row_qid=rq, col_qid=cq,
             interpret=bool(interpret) and not _on_tpu())
-    return _fused_ref_jit(driver, driven, dk, vk,
-                          jnp.float32(dist), jnp.float32(theta), k)
+    return _fused_ref_jit(driver, driven, dk, vk, dist_arr, theta_arr,
+                          rq, cq, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def _fused_ref_jit(driver, driven, dk, vk, dist, theta, k):
-    return ref.fused_topk_join_ref(driver, driven, dk, vk, dist, theta, k)
+def _fused_ref_jit(driver, driven, dk, vk, dist, theta, rq, cq, k):
+    return ref.fused_topk_join_ref(driver, driven, dk, vk, dist, theta, k,
+                                   row_qid=rq, col_qid=cq)
 
 
 def bucketed_min_core(a_planes, b_planes, interpret: bool | None = None):

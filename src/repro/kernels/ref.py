@@ -25,20 +25,30 @@ def distance_join_ref(driver: jnp.ndarray, driven: jnp.ndarray) -> jnp.ndarray:
 # ------------------------------------------------- fused top-k distance join --
 def fused_topk_join_ref(driver: jnp.ndarray, driven: jnp.ndarray,
                         driver_keys: jnp.ndarray, driven_keys: jnp.ndarray,
-                        dist, theta, k: int
+                        dist, theta, k: int,
+                        row_qid: jnp.ndarray | None = None,
+                        col_qid: jnp.ndarray | None = None
                         ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Dense oracle for kernels/fused_topk_join.py.
 
     Materializes the (M, N) distance matrix (it is the *specification*, not
     the streaming implementation) and reduces it to the same (M, k) per-row
     partials: pair survives iff box_dist <= dist AND key bound
-    driver_keys[i] + driven_keys[j] > theta. Returns (scores (M, k),
-    idx (M, k) int32, counts (M,) int32) padded with -inf / -1.
+    driver_keys[i] + driven_keys[j] > theta AND (when query ids are given)
+    both rows belong to the same query. `dist` / `theta` may be scalars or
+    per-driver-row (M,) arrays. Returns (scores (M, k), idx (M, k) int32,
+    counts (M,) int32) padded with -inf / -1.
     """
     d = distance_join_ref(driver, driven)
+    m = d.shape[0]
     bound = (driver_keys.astype(jnp.float32)[:, None]
              + driven_keys.astype(jnp.float32)[None, :])
-    valid = (d <= dist) & (bound > theta)
+    dist_row = jnp.broadcast_to(jnp.asarray(dist, jnp.float32), (m,))
+    theta_row = jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (m,))
+    valid = (d <= dist_row[:, None]) & (bound > theta_row[:, None])
+    if row_qid is not None and col_qid is not None:
+        valid &= (row_qid.astype(jnp.int32)[:, None]
+                  == col_qid.astype(jnp.int32)[None, :])
     m, n = d.shape
     col = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
     s = jnp.where(valid, bound, -jnp.inf)

@@ -1,0 +1,230 @@
+"""Multi-tenant spatial-query serving: continuous batching over STREAK.
+
+The LM decode loop in serve/engine.py generalizes directly: a fixed pool of
+`max_slots` slots, each holding one query's `QueryCursor`; waiting requests
+claim free slots, every engine step advances EVERY active slot by one driver
+block, and a query that θ-terminates (or exhausts its driver scan) releases
+its slot mid-flight for the next queued request — continuous batching, with
+"one decoded token" replaced by "one driver block".
+
+What actually batches across tenants per step:
+
+- **Phases 1-2** — every slot's `begin_block()` request is pooled into ONE
+  `candidate_nodes` call (per-block driven-CS sets + per-block distances;
+  slots of the same query shape share Bloom probes) and ONE `select_batch`
+  call with a stacked per-row cost matrix.
+- **Phase 3** — with the fused join backend, every slot's streaming join
+  registers with a `_FusedJoinBatcher`; one `fused_stream_join_multi` run
+  then launches all live queries' driver blocks in shared kernel grids with
+  per-row (distance, θ, query-id) state, each query's partial results
+  feeding back into its own TopK between launches.
+
+θ pruning is sound at any batching granularity, so per-query results are
+bit-identical to serial `StreakEngine.execute` runs — the stress tests
+assert exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import node_select, spatial_join
+from ..core.executor import ExecStats, QueryCursor, StreakEngine
+from ..core.join import Relation
+from ..core.query import Query
+
+
+@dataclasses.dataclass
+class SpatialRequest:
+    rid: int
+    query: Query
+    scores: np.ndarray | None = None
+    rows: Relation | None = None
+    stats: ExecStats | None = None
+    done: bool = False
+    steps: int = 0                  # engine steps this request stayed active
+    waited: int = 0                 # engine steps spent queued
+
+
+@dataclasses.dataclass
+class ServeStats:
+    steps: int = 0                  # engine iterations
+    admissions: int = 0             # slot claims (== completed requests)
+    released_early: int = 0         # slots freed by θ termination mid-scan
+    slot_reuse: int = 0             # admissions beyond the first per slot
+    sip_batches: int = 0            # pooled candidate_nodes/select calls
+    sip_blocks: int = 0             # driver blocks covered by those calls
+    join_launches: int = 0          # cross-query fused kernel launches
+    max_queue: int = 0
+
+
+class _FusedJoinBatcher:
+    """Collects every slot's Phase-3 streaming join for one engine step and
+    runs them as cross-query `fused_stream_join_multi` launches."""
+
+    def __init__(self, batch_cols: int, tuner=None):
+        self.batch_cols = batch_cols
+        self.tuner = tuner
+        self.entries: list[spatial_join.StreamEntry] = []
+
+    def add(self, entry: spatial_join.StreamEntry) -> None:
+        self.entries.append(entry)
+
+    def flush(self) -> int:
+        if not self.entries:
+            return 0
+        launches = spatial_join.fused_stream_join_multi(
+            self.entries, batch_cols=self.batch_cols, tuner=self.tuner)
+        self.entries = []
+        return launches
+
+
+class SpatialServeEngine:
+    """Slot-based admission loop over a shared `StreakEngine`.
+
+    One engine instance per store: the relation scan cache, the Bloom
+    `PreparedKeys`, and the kcap autotuner are shared by every tenant.
+    """
+
+    def __init__(self, store, config=None, max_slots: int = 8):
+        self.engine = StreakEngine(store, config)
+        # tenants running the same query shape (a hot query with per-user
+        # k, say) share θ-independent per-block work: driver-block
+        # materialization, S-Plan filtered retrieval, N-Plan block joins
+        # (executor.StreakEngine.share_cache) and pooled Phase-1/2 rows
+        # (deduped in step()). Serial per-query execution recomputes all
+        # of it per tenant.
+        self.engine.share_cache = {}
+        self.max_slots = max_slots
+        self.slots: list[tuple[SpatialRequest, QueryCursor] | None] = \
+            [None] * max_slots
+        self.queue: list[SpatialRequest] = []
+        self.stats = ServeStats()
+        self._slot_used = [False] * max_slots
+
+    # ------------------------------------------------------------------
+    def submit(self, req: SpatialRequest) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[slot] = (req, self.engine.cursor(req.query))
+                self.stats.admissions += 1
+                if self._slot_used[slot]:
+                    self.stats.slot_reuse += 1
+                self._slot_used[slot] = True
+
+    def _retire(self, slot: int) -> None:
+        req, cur = self.slots[slot]
+        req.scores, req.rows, req.stats = cur.results()
+        req.done = True
+        if cur.stats.early_terminated:
+            self.stats.released_early += 1
+        self.slots[slot] = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One iteration: admit, advance every active slot one driver block
+        (Phases 1-2 pooled, Phase 3 cross-query batched), retire finished
+        queries. Returns the number of active slots this step."""
+        self._admit()
+        self.stats.max_queue = max(self.stats.max_queue, len(self.queue))
+        active = [s for s in range(self.max_slots)
+                  if self.slots[s] is not None]
+        if not active:
+            return 0
+        self.stats.steps += 1
+        for s in active:
+            self.slots[s][0].steps += 1
+        for r in self.queue:
+            r.waited += 1
+
+        # ---- phase A: materialize one block per slot, pool SIP requests --
+        work: list[tuple[int, dict]] = []        # (slot, request)
+        for s in active:
+            req, cur = self.slots[s]
+            sip_req = cur.begin_block()
+            if sip_req is None:                  # finished (θ or exhausted)
+                self._retire(s)
+                continue
+            work.append((s, sip_req))
+
+        sip_slots = [(s, r) for (s, r) in work if r["need_sip"]]
+        v_stars: dict[int, list | None] = {s: None for (s, r) in work}
+        if sip_slots:
+            # one pooled Phase-1/2 call over every tenant's window rows;
+            # rows of one tenant share a CS array (and thus one frontier
+            # group), different tenants' groups ride the same batch, and
+            # identical rows from same-shape tenants collapse to one row
+            tree = self.engine.store.tree
+            boxes, cs_sets, prepared, dists, cards = [], [], [], [], []
+            row_of: dict[tuple, int] = {}
+            spans: list[tuple[int, list[int]]] = []
+            for s, r in sip_slots:
+                cs_bytes = np.asarray(r["driven_cs"]).tobytes()
+                rows = []
+                for box in r["boxes"]:
+                    box = box if box is not None else np.zeros((0, 4))
+                    rk = (box.shape, box.tobytes(), cs_bytes,
+                          float(r["dist_norm"]))
+                    idx = row_of.get(rk)
+                    if idx is None:
+                        idx = len(boxes)
+                        row_of[rk] = idx
+                        boxes.append(box)
+                        cs_sets.append(r["driven_cs"])
+                        prepared.append(r["prepared"])
+                        dists.append(r["dist_norm"])
+                        cards.append(r["card_all"])
+                    rows.append(idx)
+                spans.append((s, rows))
+            in_v = tree.candidate_nodes(boxes, np.array(dists), cs_sets,
+                                        prepared=prepared,
+                                        probe_backend=self.engine.config
+                                        .probe_backend)
+            sel = node_select.select_batch(
+                tree, in_v, cs_sets, self.engine.config.select_params,
+                card_all=np.stack(cards))
+            for s, rows in spans:
+                v_stars[s] = [sel[i] for i in rows]
+            self.stats.sip_batches += 1
+            self.stats.sip_blocks += len(boxes)
+
+        # ---- phase B: APS + driven retrieval + Phase-3 -------------------
+        batcher = None
+        if self.engine.config.join_backend == "fused" \
+                and self.engine.config.mbr_join_fn is None:
+            batcher = _FusedJoinBatcher(self.engine.config.fused_batch_cols,
+                                        tuner=self.engine.kcap_tuner)
+        for s, _ in work:
+            req, cur = self.slots[s]
+            cur.finish_block(v_stars[s], batcher=batcher)
+        if batcher is not None:
+            self.stats.join_launches += batcher.flush()
+        for s, _ in work:
+            if self.slots[s][1].done:
+                self._retire(s)
+        # bound the cross-tenant memo (entries hold relations); sharing is
+        # overwhelmingly within-step, so a coarse reset loses little
+        sc = self.engine.share_cache
+        if sc is not None and len(sc) > 1024:
+            sc.clear()
+        return len(active)
+
+    def run(self) -> None:
+        while self.queue or any(sl is not None for sl in self.slots):
+            if self.step() == 0 and not self.queue:
+                break
+
+    # ------------------------------------------------------------------
+    def serve(self, queries: list[Query]) -> list[SpatialRequest]:
+        """Convenience: submit all, run to completion, return requests in
+        submission order."""
+        reqs = [SpatialRequest(rid=i, query=q) for i, q in enumerate(queries)]
+        for r in reqs:
+            self.submit(r)
+        self.run()
+        return reqs

@@ -1,0 +1,177 @@
+"""Differential query fuzzing: random spatial top-k queries on small
+`synth_rdf` stores, STREAK vs the full-scan numpy oracle, bit-identical.
+
+The generator sweeps query shape (class pair, distance/selectivity regime,
+k, ranking weights, ASC/DESC, extra-pattern counts) and engine configuration
+(join_impl, join/probe/rank backends, SIP lookahead width). Scores are
+compared exactly — both engines accumulate the same f64 score keys in the
+same term order, so any drift is a real soundness bug, not float noise.
+(This harness is what caught the anisotropic `denormalize_distance`
+pruning bug in core/geometry.py.)
+
+Runs under real `hypothesis` when installed, or the fallback shim in
+tests/_hypothesis_fallback.py (seeded random sampling) otherwise.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.baselines import FullScanEngine
+from repro.core.executor import ExecConfig, StreakEngine
+from repro.core.query import Query, Ranking, SpatialFilter, TriplePattern, Var
+from repro.data.synth_rdf import make_lgd
+
+# class -> extra (pa/pb-attached) predicates available for pattern-count
+# fuzzing; mirrors the synth_rdf LGD catalog
+CLASSES = {
+    "class:hotel": ("name", "label", "stars"),
+    "class:park": ("label", "area"),
+    "class:police": ("name",),
+    "class:road": ("name", "lanes"),
+    "class:pub": ("name", "label"),
+}
+
+_DATASETS: dict = {}
+_ENGINES: dict = {}
+_ORACLE: dict = {}
+
+
+def _dataset(seed: int):
+    if seed not in _DATASETS:
+        _DATASETS[seed] = make_lgd(n_per_class=60, seed=seed, block=64)
+    return _DATASETS[seed]
+
+
+def _engine(seed: int, **cfg) -> StreakEngine:
+    key = (seed, tuple(sorted(cfg.items())))
+    if key not in _ENGINES:
+        _ENGINES[key] = StreakEngine(_dataset(seed).store, ExecConfig(**cfg))
+    return _ENGINES[key]
+
+
+def _mk_query(seed, cls_a, cls_b, dist, k, w_a, w_b, descending,
+              n_extra_a, n_extra_b) -> Query:
+    """pair_query-shaped random query: two reified-type confidence-ranked
+    sides joined by a spatial distance filter."""
+    ns = _dataset(seed).ns
+    pa, pb = Var("place"), Var("nplace")
+    patterns = [
+        TriplePattern(pa, Var("typePred1"), ns[cls_a], g=Var("r")),
+        TriplePattern(Var("r"), ns["hasConfidence"], Var("conf")),
+        TriplePattern(pa, ns["hasGeometry"], Var("g1")),
+        TriplePattern(pb, Var("typePred2"), ns[cls_b], g=Var("r1")),
+        TriplePattern(Var("r1"), ns["hasConfidence"], Var("conf1")),
+        TriplePattern(pb, ns["hasGeometry"], Var("g2")),
+    ]
+    for p in CLASSES[cls_a][:n_extra_a]:
+        patterns.append(TriplePattern(pa, ns[p], Var(f"a_{p}")))
+    for p in CLASSES[cls_b][:n_extra_b]:
+        patterns.append(TriplePattern(pb, ns[p], Var(f"b_{p}")))
+    return Query(
+        select=(pa, pb), patterns=tuple(patterns),
+        spatial=SpatialFilter(Var("g1"), Var("g2"), dist),
+        ranking=Ranking(((Var("conf"), w_a), (Var("conf1"), w_b)),
+                        descending=descending),
+        k=k)
+
+
+def _oracle_scores(seed, shape) -> np.ndarray:
+    key = (seed, shape)
+    if key not in _ORACLE:
+        q = _mk_query(seed, *shape)
+        scores, _, _ = FullScanEngine(_dataset(seed).store).execute(q)
+        _ORACLE[key] = scores
+    return _ORACLE[key]
+
+
+def _check(seed, shape, **cfg):
+    q = _mk_query(seed, *shape)
+    want = _oracle_scores(seed, shape)
+    got, rows, _ = _engine(seed, **cfg).execute(q)
+    assert len(got) == len(want), (shape, cfg)
+    # ties (clipped confidences) may permute boundary ROWS, never scores
+    np.testing.assert_array_equal(np.sort(got), np.sort(want))
+    assert rows.n == len(got)
+
+
+# --------------------------------------------------------------------------
+CLS = sorted(CLASSES)
+
+# query shape: class pair, selectivity regime, k, weights, direction,
+# extra-pattern counts (weights snapped to a grid so the oracle cache hits)
+QSHAPE = st.tuples(
+    st.sampled_from(CLS), st.sampled_from(CLS),
+    st.sampled_from([1.5, 3.0, 6.0, 12.0]),          # dist: high -> low sel.
+    st.sampled_from([1, 3, 10, 40, 150]),            # k
+    st.sampled_from([0.25, 1.0, 1.75]),              # w_a
+    st.sampled_from([0.5, 1.0, 2.0]),                # w_b
+    st.booleans(),                                   # descending
+    st.integers(0, 3), st.integers(0, 2),            # extra pattern counts
+)
+
+ECONF = st.tuples(
+    st.sampled_from(["merge", "looped"]),            # join_impl
+    st.sampled_from(["numpy", "fused"]),             # join_backend
+    st.sampled_from([None, "numpy", "interpret"]),   # probe_backend
+    st.sampled_from([None, "numpy", "cpu"]),         # rank_backend
+    st.sampled_from([1, 3, 8]),                      # sip_lookahead
+)
+
+SEED = st.sampled_from([0, 1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEED, QSHAPE, ECONF)
+def test_fuzz_engine_matches_full_scan(seed, shape, econf):
+    join_impl, join_backend, probe_backend, rank_backend, lookahead = econf
+    _check(seed, shape,
+           join_impl=join_impl, join_backend=join_backend,
+           probe_backend=probe_backend, rank_backend=rank_backend,
+           sip_lookahead=lookahead, fused_batch_cols=256)
+
+
+@settings(max_examples=15, deadline=None)
+@given(QSHAPE)
+def test_fuzz_serving_matches_full_scan(shape):
+    """The same differential property through the multi-tenant slot loop:
+    a fuzzed query batched against two fixed companions must still match
+    the oracle exactly."""
+    from repro.serve.spatial import SpatialServeEngine
+    ds = _dataset(0)
+    q = _mk_query(0, *shape)
+    companions = [ds.queries[0], ds.queries[3]]
+    srv = SpatialServeEngine(
+        ds.store, ExecConfig(join_backend="fused", fused_batch_cols=256,
+                             kcap_auto=True), max_slots=3)
+    reqs = srv.serve([q] + companions)
+    want = _oracle_scores(0, shape)
+    np.testing.assert_array_equal(np.sort(reqs[0].scores), np.sort(want))
+
+
+# ---------------------------------------------------- deterministic axes ---
+# exhaustive backend matrix on two fixed shapes: guarantees every axis value
+# is exercised even when the fuzz sampler (or the fallback shim) misses one
+_FIXED = [
+    ("class:hotel", "class:park", 6.0, 25, 1.0, 1.0, False, 1, 0),
+    ("class:pub", "class:police", 3.0, 10, 1.75, 0.5, True, 2, 1),
+]
+
+
+@pytest.mark.parametrize("join_impl", ["merge", "looped"])
+@pytest.mark.parametrize("join_backend", ["numpy", "fused"])
+@pytest.mark.parametrize("lookahead", [1, 8])
+def test_backend_matrix_matches_oracle(join_impl, join_backend, lookahead):
+    for shape in _FIXED:
+        _check(0, shape, join_impl=join_impl, join_backend=join_backend,
+               sip_lookahead=lookahead, fused_batch_cols=256)
+
+
+@pytest.mark.parametrize("probe_backend", [None, "numpy", "interpret"])
+def test_probe_backends_match_oracle(probe_backend):
+    _check(0, _FIXED[0], probe_backend=probe_backend)
+
+
+@pytest.mark.parametrize("rank_backend", [None, "numpy", "cpu"])
+def test_rank_backends_match_oracle(rank_backend):
+    _check(0, _FIXED[1], rank_backend=rank_backend)

@@ -1,0 +1,312 @@
+"""Multi-tenant serving: admission loop stress, cross-query batching
+primitives, and the kcap autotuner.
+
+The load-bearing property is bit-identicality: θ pruning is sound at any
+batching granularity, so interleaving N queries through the slot loop (with
+pooled Phases 1-2 and cross-query fused Phase-3 launches) must reproduce
+serial `StreakEngine.execute` results exactly — same scores, same rows.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import node_select
+from repro.core.executor import ExecConfig, StreakEngine
+from repro.core.planner import plan_query
+from repro.core.spatial_join import (JoinStats, KcapTuner, StreamEntry,
+                                     fused_stream_join,
+                                     fused_stream_join_multi)
+from repro.data.synth_rdf import make_lgd
+from repro.serve.spatial import SpatialServeEngine
+
+
+@pytest.fixture(scope="module")
+def lgd():
+    return make_lgd(n_per_class=150, seed=0, block=128)
+
+
+@pytest.fixture(scope="module")
+def mixed_queries(lgd):
+    """8 tenants with mixed k (and thus mixed θ-termination profiles)."""
+    ks = (5, 20, 60, 120)
+    return [dataclasses.replace(q, k=ks[i % len(ks)])
+            for i, q in enumerate(lgd.queries)]
+
+
+def _serial(store, cfg, queries):
+    out = []
+    for q in queries:
+        scores, rows, _ = StreakEngine(store, cfg).execute(q)
+        out.append((scores, rows))
+    return out
+
+
+def _boxes(rng, n, size=0.03):
+    lo = rng.random((n, 2))
+    return np.concatenate([lo, lo + size * rng.random((n, 2))], axis=1)
+
+
+# ------------------------------------------------- admission-loop stress ---
+CONFIGS = [ExecConfig(),
+           ExecConfig(join_backend="fused", fused_batch_cols=256),
+           ExecConfig(join_backend="fused", fused_batch_cols=256,
+                      kcap_auto=True)]
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=["numpy", "fused", "fused-kcap"])
+def test_serve_bit_identical_to_serial(lgd, mixed_queries, cfg):
+    serial = _serial(lgd.store, cfg, mixed_queries)
+    srv = SpatialServeEngine(lgd.store, cfg, max_slots=3)
+    reqs = srv.serve(mixed_queries)
+    assert [r.rid for r in reqs] == list(range(len(mixed_queries)))
+    for req, (scores, rows) in zip(reqs, serial):
+        assert req.done
+        np.testing.assert_array_equal(req.scores, scores)
+        assert req.rows.n == rows.n
+        for v in req.query.select:
+            if rows.n:      # an empty TopK relation carries no columns
+                np.testing.assert_array_equal(req.rows[v.name], rows[v.name])
+    # the slot loop really batched: pooled SIP calls covered several blocks
+    assert srv.stats.sip_batches > 0
+    assert srv.stats.sip_blocks > srv.stats.sip_batches
+    if cfg.join_backend == "fused":
+        assert srv.stats.join_launches > 0
+
+
+def test_slot_reuse_and_no_starvation(lgd, mixed_queries):
+    srv = SpatialServeEngine(lgd.store, ExecConfig(), max_slots=2)
+    reqs = srv.serve(mixed_queries)
+    st = srv.stats
+    assert all(r.done for r in reqs)
+    assert st.admissions == len(mixed_queries)
+    # 2 slots, 8 tenants: every admission past the first pair reuses a slot
+    assert st.slot_reuse == len(mixed_queries) - 2
+    assert st.max_queue >= 1
+    # starvation check: every request became active and finished within the
+    # global step budget; nobody queued forever
+    for r in reqs:
+        assert 1 <= r.steps <= st.steps
+        assert r.waited < st.steps
+
+
+def test_theta_termination_releases_slots_midflight(lgd, mixed_queries):
+    srv = SpatialServeEngine(lgd.store, ExecConfig(), max_slots=3)
+    reqs = srv.serve(mixed_queries)
+    # small-k tenants θ-terminate before exhausting their driver scan,
+    # freeing slots for queued requests
+    assert srv.stats.released_early >= 1
+    early = [r for r in reqs if r.stats.early_terminated]
+    assert early
+    assert max(r.steps for r in early) < max(r.steps for r in reqs)
+
+
+def test_serve_single_slot_degenerates_to_serial(lgd, mixed_queries):
+    """max_slots=1 is plain serial execution through the serve loop."""
+    serial = _serial(lgd.store, ExecConfig(), mixed_queries[:3])
+    srv = SpatialServeEngine(lgd.store, ExecConfig(), max_slots=1)
+    reqs = srv.serve(mixed_queries[:3])
+    for req, (scores, _) in zip(reqs, serial):
+        np.testing.assert_array_equal(req.scores, scores)
+    assert srv.stats.slot_reuse == 2
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=["numpy", "fused", "fused-kcap"])
+def test_hot_shape_tenants_share_work_bit_identical(lgd, cfg):
+    """Tenants running the SAME query shape with per-tenant k hit the
+    cross-tenant share cache (materialization, driven retrieval, MBR pairs,
+    refine verdicts) and must stay bit-identical to serial — including the
+    per-tenant scan-volume stats, which a cache hit replays rather than
+    skips."""
+    hot = [dataclasses.replace(lgd.queries[0], k=k) for k in (5, 20, 60, 120)]
+    serial_stats = []
+    serial = []
+    for q in hot:
+        scores, rows, st = StreakEngine(lgd.store, cfg).execute(q)
+        serial.append((scores, rows))
+        serial_stats.append(st)
+    srv = SpatialServeEngine(lgd.store, cfg, max_slots=4)
+    reqs = srv.serve(hot)
+    for req, (scores, rows), st in zip(reqs, serial, serial_stats):
+        np.testing.assert_array_equal(req.scores, scores)
+        assert req.rows.n == rows.n
+        assert req.stats.driven_rows_scanned == st.driven_rows_scanned
+        assert req.stats.driven_rows_after_sip == st.driven_rows_after_sip
+    assert srv.engine.share_cache  # sharing actually happened
+
+
+# ------------------------------------------- cross-query join primitive ---
+def test_multi_query_stream_join_matches_serial():
+    rng = np.random.default_rng(1)
+    entries, expected, got = [], [], []
+
+    def canon(chunks):
+        if not chunks:
+            return np.empty((2, 0), np.int64)
+        a = np.concatenate(chunks, axis=1)
+        return a[:, np.lexsort((a[1], a[0]))]
+
+    for qi in range(3):
+        m, n = 40 + 8 * qi, 150 + 30 * qi
+        drv, dvn = _boxes(rng, m), _boxes(rng, n)
+        dk, vk = rng.random(m), rng.random(n)
+        dist = 0.15 + 0.05 * qi
+        expected.append(canon([np.stack([pi, pj]) for pi, pj in
+                               fused_stream_join(drv, dvn, dk, vk, dist,
+                                                 k=16)]))
+        acc = []
+        got.append(acc)
+        entries.append(StreamEntry(
+            drv, dvn, dk, vk, dist, 16, theta_fn=lambda: -np.inf,
+            emit=lambda pi, pj, a=acc: a.append(np.stack([pi, pj]))))
+    launches = fused_stream_join_multi(entries, batch_cols=128)
+    assert launches >= 1
+    for exp, acc in zip(expected, got):
+        np.testing.assert_array_equal(canon(acc), exp)
+
+
+def test_multi_query_stream_join_respects_per_query_theta():
+    """A query whose θ already exceeds every pair bound emits nothing while
+    its batch-mates still emit everything."""
+    rng = np.random.default_rng(2)
+    drv, dvn = _boxes(rng, 30), _boxes(rng, 100)
+    dk, vk = rng.random(30), rng.random(100)
+    open_acc, closed_acc = [], []
+    entries = [
+        StreamEntry(drv, dvn, dk, vk, 0.4, 8, theta_fn=lambda: -np.inf,
+                    emit=lambda pi, pj: open_acc.append((pi, pj))),
+        StreamEntry(drv, dvn, dk, vk, 0.4, 8, theta_fn=lambda: np.inf,
+                    emit=lambda pi, pj: closed_acc.append((pi, pj))),
+    ]
+    fused_stream_join_multi(entries, batch_cols=64)
+    assert open_acc and not closed_acc
+
+
+# ------------------------------------------- pooled Phases 1-2 primitives ---
+def test_multi_cs_candidate_nodes_matches_per_block(lgd):
+    store = lgd.store
+    plans = [plan_query(store, q) for q in lgd.queries[:3]]
+    rng = np.random.default_rng(3)
+    n_b = 6
+    boxes = [_boxes(rng, 4, size=0.01)[: 2 + i % 3] for i in range(n_b)]
+    cs_sets = [plans[i % 3].driven_cs for i in range(n_b)]
+    dists = np.array([plans[i % 3].dist_norm for i in range(n_b)])
+    in_v = store.tree.candidate_nodes(boxes, dists, cs_sets)
+    assert in_v.shape == (n_b, store.tree.n_nodes)
+    for i in range(n_b):
+        ref = store.tree.candidate_nodes(boxes[i], float(dists[i]),
+                                         cs_sets[i])
+        np.testing.assert_array_equal(in_v[i], ref)
+
+
+def test_select_batch_per_row_costs_match_per_block(lgd):
+    store = lgd.store
+    tree = store.tree
+    plans = [plan_query(store, q) for q in lgd.queries[:2]]
+    rng = np.random.default_rng(4)
+    n_b = 4
+    boxes = [_boxes(rng, 3, size=0.02) for _ in range(n_b)]
+    cs_sets = [plans[i % 2].driven_cs for i in range(n_b)]
+    dists = np.array([plans[i % 2].dist_norm for i in range(n_b)])
+    in_v = tree.candidate_nodes(boxes, dists, cs_sets)
+    card = np.stack([tree.cs_stats.cardinality_all(c) for c in cs_sets])
+    sel = node_select.select_batch(tree, in_v, cs_sets, card_all=card)
+    assert len(sel) == n_b
+    for i in range(n_b):
+        ref = node_select.select(tree, in_v[i], cs_sets[i])
+        np.testing.assert_array_equal(sel[i], ref)
+
+
+# ------------------------------------------------------- kcap autotuner ---
+def test_kcap_tuner_ewma_math():
+    t = KcapTuner(alpha=0.25, headroom=1.5, floor=8, ceiling=1024)
+    assert t.ewma is None
+    t.update(np.array([3, 10, 7]))      # folds the per-launch MAX
+    assert t.ewma == 10.0
+    t.update(np.array([20]))
+    assert t.ewma == 0.25 * 20 + 0.75 * 10.0
+    t.update(np.array([], dtype=np.int64))   # empty launch: no change
+    assert t.ewma == 12.5
+
+
+def test_kcap_tuner_suggest_clamps():
+    t = KcapTuner()
+    assert t.suggest(4, 4096) == 64      # cold start: legacy max(k, 64)
+    assert t.suggest(100, 4096) == 128   # ... pow2-rounded above k
+    t.ewma = 21.0                        # ceil(21 * 1.5) = 32 (exact pow2)
+    assert t.suggest(4, 4096) == 32
+    t.ewma = 22.0                        # ceil(33) -> next pow2 = 64
+    assert t.suggest(4, 4096) == 64
+    t.ewma = 1.0
+    assert t.suggest(1, 4096) == 8       # floor
+    assert t.suggest(100, 4096) == 128   # k dominates the floor
+    t.ewma = 5000.0
+    assert t.suggest(1, 4096) == 1024    # ceiling
+    assert t.suggest(1, 16) == 16        # batch_cols caps everything
+
+
+def test_kcap_undershoot_recovery_exact_and_recorded():
+    """A tuner capped far below the survivor burst must not change the
+    candidate set — overflowing rows are recovered densely — and the
+    overflow must be visible in JoinStats."""
+    rng = np.random.default_rng(5)
+    drv, dvn = _boxes(rng, 48), _boxes(rng, 300)
+    dk, vk = rng.random(48), rng.random(300)
+
+    def run(stats=None, tuner=None):
+        chunks = [np.stack([pi, pj]) for pi, pj in fused_stream_join(
+            drv, dvn, dk, vk, 0.4, k=2, batch_cols=64,
+            stats=stats, tuner=tuner)]
+        a = np.concatenate(chunks, axis=1)
+        return a[:, np.lexsort((a[1], a[0]))]
+
+    base = run()
+    stats = JoinStats()
+    tight = KcapTuner(floor=1, ceiling=2)    # kcap pinned to 2 columns
+    np.testing.assert_array_equal(run(stats=stats, tuner=tight), base)
+    assert stats.overflow_rows > 0
+    assert stats.overflow_batches > 0
+
+
+def test_overflow_stats_recorded_without_tuner():
+    """The fixed-width path records the (rare) silent overflow too."""
+    rng = np.random.default_rng(6)
+    drv, dvn = _boxes(rng, 30), _boxes(rng, 400)
+    dk, vk = rng.random(30), rng.random(400)
+    stats = JoinStats()
+    # k=2 -> fixed kcap 64; dist 2.0 makes every pair survive (400 > 64)
+    list(fused_stream_join(drv, dvn, dk, vk, 2.0, k=2, batch_cols=400,
+                           stats=stats))
+    assert stats.overflow_rows > 0
+    assert stats.overflow_batches > 0
+
+
+# ------------------------------------------------ kernel per-row state ---
+def test_kernel_per_row_dist_theta_qid_matches_ref():
+    """The serving-layer kernel form: per-row distance/θ planes + query-id
+    masking, Pallas interpret vs the ref oracle."""
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import fused_topk_join_ref
+    rng = np.random.default_rng(7)
+    m, n = 40, 130
+    drv, dvn = (_boxes(rng, m).astype(np.float32),
+                _boxes(rng, n).astype(np.float32))
+    dk = rng.random(m).astype(np.float32)
+    vk = rng.random(n).astype(np.float32)
+    dist = (0.05 + 0.3 * rng.random(m)).astype(np.float32)
+    theta = (0.6 * rng.random(m)).astype(np.float32)
+    rq = rng.integers(0, 3, m).astype(np.int32)
+    cq = rng.integers(0, 3, n).astype(np.int32)
+    gs, gi, gc = kops.fused_topk_join(drv, dvn, dk, vk, dist, theta, k=16,
+                                      row_qid=rq, col_qid=cq, interpret=True)
+    ws, wi, wc = fused_topk_join_ref(drv, dvn, dk, vk, dist, theta, 16,
+                                     row_qid=rq, col_qid=cq)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                               rtol=1e-6, atol=1e-6)
+    # qid masking really bit: cross-query pairs never surface
+    gi_np = np.asarray(gi)
+    for r in range(m):
+        cols = gi_np[r][gi_np[r] >= 0]
+        assert (cq[cols] == rq[r]).all()
