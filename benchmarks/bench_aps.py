@@ -5,7 +5,7 @@ mid-query as theta tightens.
 """
 from __future__ import annotations
 
-from repro.core.executor import ExecConfig, StreakEngine
+from repro import ExecConfig, StreakEngine
 
 from . import common
 

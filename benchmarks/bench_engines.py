@@ -6,8 +6,8 @@ ours is the in-memory scan cache, same role).
 """
 from __future__ import annotations
 
+from repro import StreakEngine
 from repro.core.baselines import FullScanEngine
-from repro.core.executor import StreakEngine
 
 from . import common
 

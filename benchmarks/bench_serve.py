@@ -33,7 +33,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.executor import ExecConfig, StreakEngine
+from repro import BackendPolicy, ExecConfig, StreakEngine
 from repro.serve.spatial import SpatialServeEngine
 
 from . import common
@@ -44,7 +44,7 @@ KS = (5, 10, 20, 40, 60, 80, 100, 120)   # per-tenant k mix
 
 CONFIGS = {
     "numpy": ExecConfig(),
-    "fused": ExecConfig(join_backend="fused", kcap_auto=True),
+    "fused": ExecConfig(policy=BackendPolicy(join="fused", kcap="auto")),
 }
 
 

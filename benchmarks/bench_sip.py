@@ -17,8 +17,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import ExecConfig, StreakEngine
 from repro.core import node_select, squadtree
-from repro.core.executor import ExecConfig, StreakEngine
 
 from . import common
 
@@ -103,8 +103,47 @@ def _phase_rows() -> list:
     return rows
 
 
+def _descend_rows() -> list:
+    """Phase-1 traversal routes: the batched level-synchronous host
+    frontier vs the fused descent (`descend_backend="kernel"`, which on CPU
+    runs the jitted dense collapse — zero per-level host round-trips; on
+    TPU the same dispatch runs the Pallas tree_descend kernel). The
+    root-path Bloom mask is precomputed once per query (`cs_path_mask`),
+    exactly as the executor's cursor does."""
+    tree, boxes, rng = _phase_tree()
+    rows = []
+    for name, n_blocks, m, dist, n_cs in _PHASE_CASES:
+        box_sets = [tree.extent.normalize(
+            boxes[rng.integers(0, len(boxes), size=m)])
+            for _ in range(n_blocks)]
+        driven_cs = np.arange(1, 1 + n_cs, dtype=np.int64)
+        prep = tree.bloom_self.prepare(driven_cs)
+        cs_path = tree.cs_path_mask(driven_cs, prepared=prep)
+
+        def frontier():
+            return tree.candidate_nodes(box_sets, dist, driven_cs,
+                                        prepared=prep)
+
+        def fused():
+            return tree.candidate_nodes(box_sets, dist, driven_cs,
+                                        prepared=prep,
+                                        descend_backend="kernel",
+                                        cs_path=cs_path)
+
+        np.testing.assert_array_equal(fused(), frontier())
+        tf, td = common.timeit(frontier), common.timeit(fused)
+        shape = (f"nodes={tree.n_nodes};blocks={n_blocks};m={m};"
+                 f"dist={dist};cs={n_cs}")
+        rows += [
+            common.row(f"sip_descend/{name}/frontier", tf, shape),
+            common.row(f"sip_descend/{name}/fused", td,
+                       f"speedup={tf/max(td,1):.2f}x"),
+        ]
+    return rows
+
+
 def run() -> list:
-    rows = _phase_rows()
+    rows = _phase_rows() + _descend_rows()
     for ds_name in ("yago3", "lgd"):
         ds = common.dataset(ds_name)
         for qi, q in enumerate(ds.queries):

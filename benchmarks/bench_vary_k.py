@@ -9,8 +9,8 @@ import dataclasses
 
 import numpy as np
 
+from repro import ExecConfig, StreakEngine
 from repro.core.baselines import FullScanEngine
-from repro.core.executor import ExecConfig, StreakEngine
 
 from . import common
 

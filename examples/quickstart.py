@@ -5,8 +5,8 @@ spatial-join SPARQL query through STREAK.
 """
 import numpy as np
 
-from repro.core import (ExecConfig, Query, Ranking, SpatialFilter,
-                        StreakEngine, TriplePattern, Var, build_store)
+from repro import (ExecConfig, Query, Ranking, SpatialFilter,
+                   StreakEngine, TriplePattern, Var, build_store)
 from repro.core.dictionary import Dictionary
 
 

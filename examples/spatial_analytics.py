@@ -7,8 +7,8 @@ early-termination behaviour per query (the paper's §5 analysis, live).
 import argparse
 import time
 
+from repro import ExecConfig, StreakEngine
 from repro.core.baselines import FullScanEngine
-from repro.core.executor import ExecConfig, StreakEngine
 from repro.data import synth_rdf
 
 

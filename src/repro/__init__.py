@@ -1,0 +1,25 @@
+"""STREAK reproduction: top-k SPARQL with spatial filters on JAX/Pallas.
+
+Stable public surface — everything an application needs to build a store,
+configure backends, and run spatial top-k queries:
+
+    from repro import (QuadStore, build_store, StreakEngine, ExecConfig,
+                       BackendPolicy, Query, TriplePattern, Relation)
+
+    store = build_store(quads, numeric_predicates=..., geometries=...)
+    engine = StreakEngine(store, ExecConfig(policy=BackendPolicy()))
+    scores, rows, stats = engine.execute(query)
+
+Subsystem internals (kernels, planner, serving loop, baselines) stay
+importable under their module paths (`repro.core.*`, `repro.kernels.*`,
+`repro.serve.*`) but are not covered by this surface.
+"""
+from .core import (BackendPolicy, ExecConfig, ExecStats, Query, QuadStore,
+                   Ranking, Relation, SpatialFilter, StreakEngine,
+                   TriplePattern, Var, build_store)
+
+__all__ = [
+    "BackendPolicy", "ExecConfig", "ExecStats", "Query", "QuadStore",
+    "Ranking", "Relation", "SpatialFilter", "StreakEngine", "TriplePattern",
+    "Var", "build_store",
+]

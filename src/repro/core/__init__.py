@@ -9,5 +9,13 @@ Public surface:
 - baselines: sync R-tree join, full-scan engine (baselines, rtree)
 """
 from .executor import ExecConfig, ExecStats, StreakEngine  # noqa: F401
+from .join import Relation  # noqa: F401
+from .policy import BackendPolicy  # noqa: F401
 from .query import Query, Ranking, SpatialFilter, TriplePattern, Var  # noqa: F401
 from .store import QuadStore, build_store  # noqa: F401
+
+__all__ = [
+    "BackendPolicy", "ExecConfig", "ExecStats", "Query", "QuadStore",
+    "Ranking", "Relation", "SpatialFilter", "StreakEngine", "TriplePattern",
+    "Var", "build_store",
+]

@@ -9,12 +9,15 @@ fires when the best possible remaining score key cannot beat theta.
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from typing import Callable
 
 import numpy as np
 
 from . import aps, node_select, spatial_join
 from .join import Relation, filter_in_ranges, join, scan_pattern
 from .planner import QueryPlan, SidePlan, plan_query
+from .policy import BackendPolicy
 from .query import Query, Var
 from .spatial_join import JoinStats
 from .store import DirectedNumericScan, QuadStore
@@ -23,27 +26,60 @@ from .topk import TopK
 
 @dataclasses.dataclass
 class ExecConfig:
+    """Engine configuration.
+
+    Backend selection lives on ``policy`` (core/policy.BackendPolicy), one
+    frozen value resolved once in ``__post_init__`` — every per-stage knob
+    below it (``join_backend`` .. ``kcap_auto``) is a deprecated shim that
+    folds into the policy with a DeprecationWarning and then carries the
+    RESOLVED backend back out, so legacy readers observe the same strings
+    the engine executes with.
+    """
     block: int = 1024
     use_sip: bool = True
     force_plan: str | None = None       # "N" | "S" | None (adaptive)
     force_driver: str | None = None     # "a" | "b" | None
-    join_backend: str = "numpy"         # "numpy" | "kernel" | "fused"
-    join_impl: str | None = None        # core/join.JOIN_IMPLS; None = auto
-    #                                     ("merge", the jitted two-phase core)
+    # deprecated per-stage shims -> policy.join / .impl (see __post_init__)
+    join_backend: str | None = None
+    join_impl: str | None = None
     fused_batch_cols: int = 4096        # driven columns per fused-kernel call
     refine_chunk: int = 1024            # candidate pairs refined per θ check
     sip_lookahead: int = 8              # driver blocks per batched SIP call
-    probe_backend: str | None = None    # charsets.PROBE_BACKENDS; None = auto
-    rank_backend: str | None = None     # merge-join rank pass backend
-    #                                     (kernels/ops.RANK_BACKENDS); None=auto
-    kcap_auto: bool = False             # EWMA-autotune the fused partial width
-    #                                     (spatial_join.KcapTuner), shared
-    #                                     across this engine's queries
-    mbr_join_fn: object = None          # override Phase-3 MBR join (baselines)
+    probe_backend: str | None = None    # deprecated shim -> policy.probe
+    rank_backend: str | None = None     # deprecated shim -> policy.rank
+    kcap_auto: bool | None = None       # deprecated shim -> policy.kcap
+    mbr_join_fn: Callable | None = None  # override Phase-3 MBR join (baselines)
     select_params: node_select.SelectParams = dataclasses.field(
         default_factory=node_select.SelectParams)
     cost_params: aps.CostParams = dataclasses.field(
         default_factory=aps.CostParams)
+    policy: BackendPolicy | None = None  # backend selection; None = all-auto
+
+    def __post_init__(self) -> None:
+        legacy = {"join": self.join_backend, "impl": self.join_impl,
+                  "probe": self.probe_backend, "rank": self.rank_backend,
+                  "kcap": (None if self.kcap_auto is None
+                           else ("auto" if self.kcap_auto else "fixed"))}
+        legacy = {k: v for k, v in legacy.items() if v is not None}
+        base = self.policy if self.policy is not None else BackendPolicy()
+        if legacy:
+            names = {"join": "join_backend", "impl": "join_impl",
+                     "probe": "probe_backend", "rank": "rank_backend",
+                     "kcap": "kcap_auto"}
+            warnings.warn(
+                "ExecConfig per-stage backend knobs ("
+                + ", ".join(names[k] for k in legacy)
+                + ") are deprecated; use ExecConfig(policy=BackendPolicy("
+                + ", ".join(f"{k}={v!r}" for k, v in legacy.items()) + "))",
+                DeprecationWarning, stacklevel=3)
+            base = dataclasses.replace(base, **legacy)
+        self.policy = base.resolve()
+        # resolved write-back: legacy readers keep seeing concrete backends
+        self.join_backend = self.policy.join
+        self.join_impl = self.policy.impl
+        self.probe_backend = self.policy.probe
+        self.rank_backend = self.policy.rank
+        self.kcap_auto = self.policy.kcap == "auto"
 
 
 @dataclasses.dataclass
@@ -68,7 +104,7 @@ class StreakEngine:
         # one tuner per engine: survivor statistics carry across queries,
         # which is exactly the serving workload the autotuner targets
         self.kcap_tuner = (spatial_join.KcapTuner()
-                           if self.config.kcap_auto else None)
+                           if self.config.policy.kcap == "auto" else None)
         # cross-tenant work sharing (serve mode): the serving layer sets
         # this to a dict, and per-block sub-results that are PURE functions
         # of (side signature, block) or (side signature, SIP intervals) —
@@ -366,8 +402,7 @@ class QueryCursor:
         store = engine.store
         self.tree = store.tree
         self.plan = plan_query(store, q, force_driver=cfg.force_driver,
-                               join_impl=cfg.join_impl,
-                               rank_backend=cfg.rank_backend)
+                               policy=cfg.policy)
         self.stats = ExecStats()
         self.topk = TopK(k=self.plan.k, descending=True)  # key space
         self.driver, self.driven = self.plan.driver, self.plan.driven
@@ -383,6 +418,14 @@ class QueryCursor:
         # reused by every frontier level of every window
         self.prepared = (self.tree.bloom_self.prepare(self.plan.driven_cs)
                          if cfg.use_sip else None)
+        # fused-descent routes probe the Bloom root paths ONCE per query
+        # (block/box-independent, see SQuadTree.cs_path_mask) instead of
+        # once per frontier level of every lookahead window
+        self.cs_path = (
+            self.tree.cs_path_mask(self.plan.driven_cs,
+                                   prepared=self.prepared,
+                                   probe_backend=self.plan.probe_backend)
+            if cfg.use_sip and self.plan.descend_backend != "numpy" else None)
         self.window = max(int(cfg.sip_lookahead), 1) if cfg.use_sip else 1
         self._drv_sig = engine._side_sig(self.driver, self.plan)
         self.pending: dict[int, tuple] = {}  # block -> (rel, ents, boxes)
@@ -458,7 +501,8 @@ class QueryCursor:
                         for (_, _, _, bx) in mats]
             in_v = tree.candidate_nodes(
                 box_sets, plan.dist_norm, plan.driven_cs,
-                prepared=self.prepared, probe_backend=cfg.probe_backend)
+                prepared=self.prepared, probe_backend=plan.probe_backend,
+                descend_backend=plan.descend_backend, cs_path=self.cs_path)
             v_stars = node_select.select_batch(
                 tree, in_v, plan.driven_cs, cfg.select_params, self.card_all)
             for (w, _, _, _), v_star in zip(mats, v_stars):
@@ -520,7 +564,7 @@ class QueryCursor:
         dvn_ents, dvn_boxes = dvn_ents[ok], dvn_boxes[ok]
         if len(dvn_ents) == 0:
             return
-        if cfg.mbr_join_fn is None and cfg.join_backend == "fused":
+        if cfg.mbr_join_fn is None and plan.join_backend == "fused":
             # streaming fused path: driven columns arrive in score-key
             # order, each batch refined+scored+pushed before the next so
             # the θ the kernel prunes with tightens inside the block
@@ -553,14 +597,14 @@ class QueryCursor:
             sc = eng.share_cache
             key = None
             if sc is not None and cfg.mbr_join_fn is None:
-                key = ("mbr", cfg.join_backend, boxes.shape,
+                key = ("mbr", plan.join_backend, boxes.shape,
                        dvn_boxes.shape, boxes.tobytes(),
                        dvn_boxes.tobytes(), float(plan.dist_norm))
             if key is not None and key in sc:
                 pi, pj = sc[key]
             else:
                 pi, pj = join_fn(boxes, dvn_boxes, plan.dist_norm,
-                                 cfg.join_backend, stats.join)
+                                 plan.join_backend, stats.join)
                 if key is not None:
                     sc[key] = (pi, pj)
             eng._emit_pairs(pi, pj, uniq_ents, dvn_ents, drv_rel,
@@ -596,7 +640,12 @@ class QueryCursor:
 
             {"boxes": [(M_i, 4) driver MBRs, ...], "driven_cs": (C,) int64,
              "prepared": PreparedKeys, "dist_norm": float,
-             "card_all": (N,) float64, "need_sip": bool}
+             "card_all": (N,) float64, "need_sip": bool,
+             "cs_path": (N,) bool | None}
+
+        ``cs_path`` is this query's precomputed root-path Bloom mask (set on
+        fused-descent routes, None on the host frontier) — the server passes
+        it through so pooled descents skip the per-step Bloom probes.
 
         ``boxes`` covers this block plus the cursor's `sip_lookahead`
         speculative window (one row per block), so each tenant keeps the
@@ -636,7 +685,8 @@ class QueryCursor:
                         "prepared": self.prepared,
                         "dist_norm": self.plan.dist_norm,
                         "card_all": self.card_all,
-                        "need_sip": need_sip}
+                        "need_sip": need_sip,
+                        "cs_path": self.cs_path}
             if self.b >= self.n_blocks:
                 self._finish()
         return None

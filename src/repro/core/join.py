@@ -13,6 +13,13 @@ two-phase rank/gather core turns the rank pass into a single call on the
 Pallas counting kernel on TPU, jitted CPU twin / interpret mode for tests)
 followed by a static-shape CSR cumsum/repeat gather (`squadtree.csr_gather`).
 
+Two bit-identical fast paths sit in front of the sort: relations carry
+`sorted_by` (index scans report their permutation-index order, join outputs
+are ordered by their `on` key), which turns the stable argsort into the
+identity, and a per-relation `_keycache` replays a packing's per-column
+(vmin, span) params against new partners so `_join_chain` steps that share
+an `on` prefix never re-sort the big side.
+
 The pre-rework per-pattern numpy implementations — lexsort + per-column
 np.unique dense ranking + range expansion — are kept verbatim as the
 `*_looped` oracles; the merge path must stay bit-identical to them
@@ -40,13 +47,30 @@ def resolve_join_impl(impl: str | None) -> str:
 
 
 class Relation(dict):
-    """dict[str, np.ndarray] with aligned rows."""
+    """dict[str, np.ndarray] with aligned rows.
+
+    Two derived annotations ride along for the merge-join fast paths, both
+    conservatively dropped whenever a column is (re)assigned:
+
+    - ``sorted_by``: names the rows are known to be lexicographically sorted
+      by (stable ties). When a join's ``on`` tuple is a prefix of it, the
+      stable sorting permutation is the identity, so the argsort — the
+      dominant cost at ≥32k rows — is skipped bit-identically.
+    - ``_keycache``: per-``on`` packed composite keys (packing params +
+      sorted keys + permutation), reused across `_join_chain` steps and
+      driver blocks that re-join the same relation on the same columns.
+    """
+
+    sorted_by: tuple = ()
+
+    def __setitem__(self, key, value):
+        self.__dict__.pop("_keycache", None)
+        self.__dict__.pop("sorted_by", None)  # back to the class default ()
+        super().__setitem__(key, value)
 
     @property
     def n(self) -> int:
-        for v in self.values():
-            return len(v)
-        return 0
+        return len(next(iter(self.values()), ()))
 
     def take(self, idx: np.ndarray) -> "Relation":
         return Relation({k: v[idx] for k, v in self.items()})
@@ -63,7 +87,8 @@ def scan_pattern(store: QuadStore, tp: TriplePattern) -> Relation:
     """Index scan for one quad pattern -> relation over its variables."""
     def const(t):
         return None if (t is None or isinstance(t, Var)) else int(t)
-    rows = store.scan(g=const(tp.g), s=const(tp.s), p=const(tp.p), o=const(tp.o))
+    rows, sort_cols = store.scan(g=const(tp.g), s=const(tp.s), p=const(tp.p),
+                                 o=const(tp.o), return_order=True)
     slots = ((tp.g, G), (tp.s, S), (tp.p, P), (tp.o, O))
     var_cols: dict[str, list[int]] = {}
     for term, col in slots:
@@ -76,8 +101,22 @@ def scan_pattern(store: QuadStore, tp: TriplePattern) -> Relation:
             mask &= rows[:, cols[0]] == rows[:, c]
     if not mask.all():
         rows = rows[mask]
-    return Relation({name: rows[:, cols[0]].copy()
-                     for name, cols in var_cols.items()})
+    rel = Relation({name: rows[:, cols[0]].copy()
+                    for name, cols in var_cols.items()})
+    # rows come back lexicographically sorted by `sort_cols` (the chosen
+    # index's columns past the bound prefix); translate to variable names,
+    # skipping bound columns (constant over the result) and repeat
+    # occurrences of a variable (tied by the equality filter above) —
+    # neither affects the lexicographic order of what remains
+    order: list[str] = []
+    for c in sort_cols:
+        for name, cols in var_cols.items():
+            if c in cols:
+                if name not in order:
+                    order.append(name)
+                break
+    rel.sorted_by = tuple(order)
+    return rel
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +131,13 @@ _KEY_SPACE = (1 << 63) - 1
 def composite_keys(a: Relation, b: Relation,
                    on: list[str]) -> tuple[np.ndarray, np.ndarray, int]:
     """Order-isomorphic int64 scalar keys for the composite `on` columns,
-    plus the exact key-domain bound `scale` (keys live in [0, scale)).
+    plus the exact key-domain bound `scale` (keys live in [0, scale))."""
+    ka, kb, scale, _ = _composite_keys_meta(a, b, on)
+    return ka, kb, scale
+
+
+def _composite_keys_meta(a: Relation, b: Relation, on: list[str]):
+    """Packed keys, scale, and the per-column (vmin, span) packing params.
 
     Columns are range-offset and mixed arithmetically (key = key * span +
     (v - vmin)), so the packed scalars compare exactly like the column
@@ -101,16 +146,25 @@ def composite_keys(a: Relation, b: Relation,
     necessary, the accumulated prefix keys — are dense-ranked over the union
     of both sides (np.unique), which bounds every factor by the row count
     while preserving order. Both sides must be non-empty.
+
+    The returned params are None once any dense-rank fallback fires (the
+    ranking depends on both sides' value sets, so the packing can't be
+    replayed against a different partner); otherwise they fully determine
+    the packing, and any relation whose column values fall inside the
+    per-column [vmin, vmin+span) windows packs to keys comparable with —
+    and bit-identical against — this call's.
     """
     ka = np.zeros(a.n, dtype=np.int64)
     kb = np.zeros(b.n, dtype=np.int64)
     scale = 1  # python int: packed keys so far live in [0, scale)
+    params: list[tuple[int, int]] | None = []
     for c in on:
         va = np.asarray(a[c], dtype=np.int64)
         vb = np.asarray(b[c], dtype=np.int64)
         vmin = int(min(va.min(), vb.min()))
         span = int(max(va.max(), vb.max())) - vmin + 1
         if scale * span > _KEY_SPACE:
+            params = None
             uniq, inv = np.unique(np.concatenate([va, vb]),
                                   return_inverse=True)
             va, vb = inv[:len(va)], inv[len(va):]
@@ -126,10 +180,58 @@ def composite_keys(a: Relation, b: Relation,
                     # rather than let the packing wrap int64 silently
                     raise OverflowError(
                         f"composite key domain {scale}x{span} exceeds int64")
+        if params is not None:
+            params.append((vmin, span))
         ka = ka * np.int64(span) + (va - np.int64(vmin))
         kb = kb * np.int64(span) + (vb - np.int64(vmin))
         scale *= span
-    return ka, kb, scale
+    return ka, kb, scale, (tuple(params) if params is not None else None)
+
+
+def _pack_with_params(rel: Relation, on: list[str],
+                      params: tuple) -> np.ndarray:
+    """Replay a `_composite_keys_meta` packing against another relation.
+
+    Only valid when `_params_fit` holds; then every key lands in the same
+    [0, scale) domain with the same ordering, so ranks against keys packed
+    by the original call are bit-identical to a joint repacking.
+    """
+    k = np.zeros(rel.n, dtype=np.int64)
+    for c, (vmin, span) in zip(on, params):
+        v = np.asarray(rel[c], dtype=np.int64)
+        k = k * np.int64(span) + (v - np.int64(vmin))
+    return k
+
+
+def _params_fit(rel: Relation, on: list[str], params: tuple) -> bool:
+    """Do `rel`'s `on` values fall inside the packing's per-column windows?"""
+    for c, (vmin, span) in zip(on, params):
+        v = np.asarray(rel[c], dtype=np.int64)
+        if int(v.min()) < vmin or int(v.max()) >= vmin + span:
+            return False
+    return True
+
+
+def _cached_pack(rel: Relation, on_t: tuple):
+    cache = rel.__dict__.get("_keycache")
+    return cache.get(on_t) if cache else None
+
+
+def _store_pack(rel: Relation, on_t: tuple, params, scale: int,
+                ks: np.ndarray, perm: np.ndarray) -> None:
+    if params is not None:
+        rel.__dict__.setdefault("_keycache", {}).setdefault(
+            on_t, (params, scale, ks, perm))
+
+
+def _sorted_keys(rel: Relation, k: np.ndarray, scale: int,
+                 on_t: tuple) -> tuple[np.ndarray, np.ndarray]:
+    """`_sort_with_perm`, skipping the sort when `rel`'s rows are already
+    sorted by an `on_t` prefix (then the stable permutation is the
+    identity and the packed keys are already in order)."""
+    if rel.sorted_by[:len(on_t)] == on_t:
+        return k, np.arange(rel.n, dtype=np.int64)
+    return _sort_with_perm(k, scale)
 
 
 def _sort_with_perm(k: np.ndarray, scale: int) -> tuple[np.ndarray,
@@ -204,9 +306,29 @@ def join(a: Relation, b: Relation, on: list[str] | None = None,
         return Relation.empty(sorted(set(a) | set(b)))
     if resolve_join_impl(impl) == "looped":
         return join_looped(a, b, on)
-    ka, kb, scale = composite_keys(a, b, on)
-    kas, oa = _sort_with_perm(ka, scale)
-    kbs, ob = _sort_with_perm(kb, scale)
+    on_t = tuple(on)
+    sides = None
+    # reuse one side's cached packing when the other side's values fit its
+    # per-column windows (same params ⇒ comparable keys ⇒ identical ranks);
+    # prefer b's cache — in `_join_chain` b is the large per-pattern scan
+    # re-joined every driver block, so its sort is the one worth skipping
+    for cached, fresh, b_cached in ((b, a, True), (a, b, False)):
+        ent = _cached_pack(cached, on_t)
+        if ent is not None and _params_fit(fresh, on, ent[0]):
+            params, scale, kcs, oc = ent
+            kf = _pack_with_params(fresh, on, params)
+            kfs, of = _sorted_keys(fresh, kf, scale, on_t)
+            _store_pack(fresh, on_t, params, scale, kfs, of)
+            sides = (kfs, of, kcs, oc) if b_cached else (kcs, oc, kfs, of)
+            break
+    if sides is None:
+        ka, kb, scale, params = _composite_keys_meta(a, b, on)
+        kas, oa = _sorted_keys(a, ka, scale, on_t)
+        kbs, ob = _sorted_keys(b, kb, scale, on_t)
+        _store_pack(a, on_t, params, scale, kas, oa)
+        _store_pack(b, on_t, params, scale, kbs, ob)
+        sides = (kas, oa, kbs, ob)
+    kas, oa, kbs, ob = sides
     lo, hi = _ranks(kbs, kas, backend)
     cnt = hi - lo
     ia = np.repeat(np.arange(a.n), cnt)
@@ -216,6 +338,9 @@ def join(a: Relation, b: Relation, on: list[str] | None = None,
     for k, v in b.items():
         if k not in out:
             out[k] = v[src_b]
+    # output rows follow a's sorted key order (stable within ties), so the
+    # next chain step joining on the same prefix skips its argsort entirely
+    out.sorted_by = on_t
     return out
 
 
@@ -306,8 +431,17 @@ def semijoin(a: Relation, b: Relation, on: list[str] | None = None,
         return a.take(np.empty(0, dtype=np.int64))
     if resolve_join_impl(impl) == "looped":
         return semijoin_looped(a, b, on)
-    ka, kb, _ = composite_keys(a, b, on)
-    return a.take(np.flatnonzero(_member_sorted(np.sort(kb), ka, backend)))
+    on_t = tuple(on)
+    ent = _cached_pack(b, on_t)
+    if ent is not None and _params_fit(a, on, ent[0]):
+        kbs = ent[2]  # already sorted (stable sort == np.sort on values)
+        ka = _pack_with_params(a, on, ent[0])
+    else:
+        ka, kb, _ = composite_keys(a, b, on)
+        kbs = kb if b.sorted_by[:len(on_t)] == on_t else np.sort(kb)
+    out = a.take(np.flatnonzero(_member_sorted(kbs, ka, backend)))
+    out.sorted_by = a.sorted_by  # flatnonzero keeps row order
+    return out
 
 
 def semijoin_looped(a: Relation, b: Relation,
@@ -365,7 +499,9 @@ def filter_in_ranges(rel: Relation, col: str, intervals: np.ndarray,
     if len(explicit):
         keep |= _member_sorted(np.asarray(explicit, dtype=np.int64), vals,
                                backend)
-    return rel.take(np.flatnonzero(keep))
+    out = rel.take(np.flatnonzero(keep))
+    out.sorted_by = rel.sorted_by  # flatnonzero keeps row order
+    return out
 
 
 def filter_in_ranges_looped(rel: Relation, col: str, intervals: np.ndarray,

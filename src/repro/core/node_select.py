@@ -32,6 +32,18 @@ class SelectParams:
     alpha_merge: float = 0.01
 
 
+def _elist_all(tree: SQuadTree) -> np.ndarray:
+    """All-node E-list sizes, memoized on the tree (query-invariant — the
+    serving layer's pooled select runs every engine step, and re-walking the
+    CSR for a static vector was its dominant per-step setup cost)."""
+    el = getattr(tree, "_elist_all_cache", None)
+    if el is None:
+        el = tree.elist_size(np.arange(tree.n_nodes)).astype(np.float64)
+        el.setflags(write=False)
+        tree._elist_all_cache = el
+    return el
+
+
 def node_costs_base(tree: SQuadTree, driven_cs: np.ndarray,
                     params: SelectParams,
                     card_all: np.ndarray | None = None
@@ -48,7 +60,7 @@ def node_costs_base(tree: SQuadTree, driven_cs: np.ndarray,
                                  for c in driven_cs])
         else:
             card_all = tree.cs_stats.cardinality_all(driven_cs)
-    el = tree.elist_size(np.arange(tree.n_nodes)).astype(np.float64)
+    el = _elist_all(tree)
     base = params.alpha_io * card_all + params.alpha_cpu * el
     xi = params.alpha_merge * el
     return base, xi

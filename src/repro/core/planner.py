@@ -15,7 +15,7 @@ import dataclasses
 
 import numpy as np
 
-from .join import resolve_join_impl
+from .policy import BackendPolicy
 from .query import Query, SpatialFilter, TriplePattern, Var
 from .store import DirectedNumericScan, QuadStore
 
@@ -66,12 +66,14 @@ class QueryPlan:
     driven_cs: np.ndarray
     descending: bool
     k: int
-    # relational primitive implementation (core/join.JOIN_IMPLS), resolved
-    # once at plan time so per-block APS plan switches (core/aps.py) reuse
-    # it with zero extra dispatch cost
-    join_impl: str = "merge"
-    # merge-join rank-pass backend (kernels/ops.RANK_BACKENDS); None = auto
-    rank_backend: str | None = None
+    # backend selection (core/policy.BackendPolicy), resolved ONCE at plan
+    # time so the per-block hot paths — APS plan switches, SIP prefetch,
+    # the Phase-3 join — read plain strings with zero dispatch cost
+    join_impl: str = "merge"            # relational primitive (JOIN_IMPLS)
+    rank_backend: str | None = None     # merge-join rank pass (RANK_BACKENDS)
+    probe_backend: str | None = None    # Bloom CS probes (PROBE_BACKENDS)
+    join_backend: str = "numpy"         # Phase-3 MBR join (JOIN_BACKENDS)
+    descend_backend: str = "numpy"      # Phase-1 traversal (DESCEND_BACKENDS)
 
 
 def resolve_spatial_vars(store: QuadStore, q: Query) -> tuple[str, str]:
@@ -148,8 +150,20 @@ def _build_side(store: QuadStore, patterns: list, entity_var: str,
 def plan_query(store: QuadStore, q: Query,
                force_driver: str | None = None,
                join_impl: str | None = None,
-               rank_backend: str | None = None) -> QueryPlan:
+               rank_backend: str | None = None,
+               policy: BackendPolicy | None = None) -> QueryPlan:
+    """Plan a spatial top-k query.
+
+    `policy` fixes every stage backend (core/policy.BackendPolicy; resolved
+    here if it still carries "auto" entries). The `join_impl` /
+    `rank_backend` kwargs are the pre-policy per-stage form, kept for
+    direct callers; they are ignored when `policy` is given.
+    """
     assert q.spatial is not None, "plan_query expects a spatial top-k query"
+    if policy is None:
+        policy = BackendPolicy(impl=join_impl or "auto",
+                               rank=rank_backend or "auto")
+    policy = policy.resolve()
     var_a, var_b = resolve_spatial_vars(store, q)
     patterns = list(q.patterns)
     side_a_patterns = _connected_component(patterns, var_a)
@@ -191,5 +205,6 @@ def plan_query(store: QuadStore, q: Query,
                      dist_world=q.spatial.dist, dist_norm=dist_norm,
                      metric=q.spatial.metric, driven_cs=driven_cs,
                      descending=descending, k=q.k,
-                     join_impl=resolve_join_impl(join_impl),
-                     rank_backend=rank_backend)
+                     join_impl=policy.impl, rank_backend=policy.rank,
+                     probe_backend=policy.probe, join_backend=policy.join,
+                     descend_backend=policy.descend)

@@ -27,6 +27,19 @@ import numpy as np
 
 from . import geometry, topk as topk_mod
 
+# Phase-3 MBR-join backend registry (see module docstring). "auto" resolves
+# to the dense numpy broadcast: the kernel path pays (M, N) materialization
+# through jax and the fused path only wins with real score keys + a live θ,
+# which the executor supplies explicitly when configured.
+JOIN_BACKENDS = ("auto", "numpy", "kernel", "fused")
+
+
+def resolve_join_backend(backend: str | None) -> str:
+    b = backend or "auto"
+    if b not in JOIN_BACKENDS:
+        raise ValueError(f"unknown spatial join backend {b!r}")
+    return "numpy" if b == "auto" else b
+
 
 @dataclasses.dataclass
 class JoinStats:

@@ -25,6 +25,29 @@ from .charsets import BloomBank, NodeCSStats, PreparedKeys, build_node_cs_stats
 from .geometry import Extent
 
 
+# Phase-1 traversal backend: "numpy" is the host level-synchronous frontier
+# (`_frontier`, fastest on CPU); "kernel" the fused Pallas descent
+# (kernels/tree_descend.py) on TPU and its jitted dense oracle on CPU;
+# "interpret" forces the Pallas kernel in interpret mode (tests). "auto"
+# resolves once per process: kernel on TPU, numpy otherwise.
+DESCEND_BACKENDS = ("auto", "numpy", "kernel", "interpret")
+_auto_descend_backend: str | None = None
+
+
+def resolve_descend_backend(backend: str | None) -> str:
+    global _auto_descend_backend
+    b = backend or "auto"
+    if b not in DESCEND_BACKENDS:
+        raise ValueError(f"unknown tree-descend backend {b!r}")
+    if b != "auto":
+        return b
+    if _auto_descend_backend is None:
+        import jax  # lazy: keep this module importable without jax
+        _auto_descend_backend = ("kernel" if jax.default_backend() == "tpu"
+                                 else "numpy")
+    return _auto_descend_backend
+
+
 def csr_gather(starts: np.ndarray, cnt: np.ndarray) -> np.ndarray:
     """Flat indices of the slices [starts_i, starts_i + cnt_i), concatenated.
 
@@ -144,7 +167,9 @@ class SQuadTree:
     def candidate_nodes(self, driver_boxes, dist_norm: float,
                         driven_cs: np.ndarray, which: str = "self",
                         prepared: PreparedKeys | None = None,
-                        probe_backend: str | None = None) -> np.ndarray:
+                        probe_backend: str | None = None,
+                        descend_backend: str | None = None,
+                        cs_path: np.ndarray | None = None) -> np.ndarray:
         """Boolean candidate mask(s): the connected set V per driver block.
 
         A node survives iff (a) its Bloom filter reports some driven-CS object
@@ -170,9 +195,18 @@ class SQuadTree:
         per-block ``(B,)`` array. Blocks whose CS sets are identical share
         one frontier pass (Bloom-probe sharing is only valid within such a
         group); per-block results are bit-identical to separate calls.
+
+        `descend_backend` selects the traversal route (`DESCEND_BACKENDS`):
+        "numpy" runs the host frontier; "kernel"/"interpret" run the fused
+        device descent, whose per-query root-path Bloom mask may be
+        precomputed once via `cs_path_mask` and passed as `cs_path` — an
+        ``(N,)`` mask in the shared-CS form, or a list aligned with the
+        `driven_cs` list in the multi-query form (rows sharing a CS group
+        must carry the same mask; missing/None entries are derived here).
         """
         bank = {"self": self.bloom_self, "in": self.bloom_in,
                 "out": self.bloom_out}[which]
+        dback = resolve_descend_backend(descend_backend)
         if isinstance(driven_cs, (list, tuple)):
             boxes = _pad_box_sets(driver_boxes)
             n_b = len(boxes)
@@ -181,6 +215,10 @@ class SQuadTree:
             dist_arr = np.broadcast_to(
                 np.asarray(dist_norm, dtype=np.float64), (n_b,))
             prep = (list(prepared) if prepared is not None else [None] * n_b)
+            paths = (list(cs_path) if isinstance(cs_path, (list, tuple))
+                     else [None] * n_b)
+            if len(prep) != n_b or len(paths) != n_b:
+                raise ValueError("prepared/cs_path lists must match the batch")
             cs_arrs = [np.asarray(c, dtype=np.int64) for c in driven_cs]
             out = np.zeros((n_b, self.n_nodes), dtype=bool)
             groups: dict[bytes, list[int]] = {}
@@ -188,16 +226,34 @@ class SQuadTree:
                 groups.setdefault(c.tobytes(), []).append(i)
             for sel in groups.values():
                 si = np.asarray(sel, dtype=np.int64)
-                out[si] = self._frontier(boxes[si], dist_arr[si],
-                                         cs_arrs[sel[0]], bank,
-                                         prep[sel[0]], probe_backend)
+                out[si] = self._route(boxes[si], dist_arr[si],
+                                      cs_arrs[sel[0]], bank, which,
+                                      prep[sel[0]], probe_backend,
+                                      dback, paths[sel[0]])
             return out
         single = isinstance(driver_boxes, np.ndarray) and driver_boxes.ndim == 2
         boxes = driver_boxes[None] if single else _pad_box_sets(driver_boxes)
-        in_v = self._frontier(boxes, dist_norm,
-                              np.asarray(driven_cs, dtype=np.int64),
-                              bank, prepared, probe_backend)
+        in_v = self._route(boxes, dist_norm,
+                           np.asarray(driven_cs, dtype=np.int64),
+                           bank, which, prepared, probe_backend,
+                           dback, cs_path)
         return in_v[0] if single else in_v
+
+    def _route(self, boxes: np.ndarray, dist_norm, driven_cs: np.ndarray,
+               bank: BloomBank, which: str, prepared, probe_backend,
+               descend_backend: str, cs_path) -> np.ndarray:
+        """One shared-CS group -> host frontier or fused device descent."""
+        if descend_backend == "numpy":
+            return self._frontier(boxes, dist_norm, driven_cs, bank,
+                                  prepared, probe_backend)
+        n_b = len(boxes)
+        if not (n_b and len(driven_cs) and boxes.shape[1]):
+            return np.zeros((n_b, self.n_nodes), dtype=bool)
+        if cs_path is None:
+            cs_path = self.cs_path_mask(driven_cs, which=which,
+                                        prepared=prepared,
+                                        probe_backend=probe_backend)
+        return self._descend(boxes, dist_norm, cs_path, descend_backend)
 
     def _frontier(self, boxes: np.ndarray, dist_norm, driven_cs: np.ndarray,
                   bank: BloomBank, prepared: PreparedKeys | None,
@@ -272,6 +328,66 @@ class SQuadTree:
                 tn = np.concatenate([p[1] for p in parts])
                 tx = np.concatenate([p[2] for p in parts])
         return in_v
+
+    def cs_path_mask(self, driven_cs: np.ndarray, which: str = "self",
+                     prepared: PreparedKeys | None = None,
+                     probe_backend: str | None = None) -> np.ndarray:
+        """(N,) bool: the Bloom verdict ANDed down each node's root path.
+
+        The fused descent's whole per-query Bloom contribution. Because
+        child MBRs nest inside their parent's exactly (clipped min/max
+        unions over subsets of the parent's rows), a driver box hitting a
+        node's expanded MBR hits every ancestor's too — so the traversal's
+        per-node verdict factorizes as ``geo_hit(n) & cs_path(n)``, with
+        this mask the only part that depends on the query's CS set. One
+        batch probe over all nodes plus a per-level parent AND (parents
+        precede children in the level sweep).
+        """
+        bank = {"self": self.bloom_self, "in": self.bloom_in,
+                "out": self.bloom_out}[which]
+        driven_cs = np.asarray(driven_cs, dtype=np.int64)
+        n = self.n_nodes
+        if n == 0 or len(driven_cs) == 0:
+            return np.zeros(n, dtype=bool)
+        if prepared is None or prepared.nbits != bank.nbits \
+                or prepared.k != bank.k \
+                or not np.array_equal(prepared.keys, driven_cs):
+            prepared = bank.prepare(driven_cs)
+        path = bank.contains_any_batch(np.arange(n, dtype=np.int64),
+                                       prepared, probe_backend)
+        for lvl in range(1, self.n_levels):
+            nodes = self.level_nodes(lvl)
+            path[nodes] &= path[self.node_parent[nodes]]
+        return path
+
+    def _node_key_planes(self) -> np.ndarray:
+        """Cached (4, N) int64 sort-key planes of the node MBRs (rows
+        x0, y0, x2, y3) for the fused descent — the tree is immutable, so
+        the f64 -> key encoding happens once per tree."""
+        keys = getattr(self, "_node_mbr_keys", None)
+        if keys is None:
+            from ..kernels import ops  # lazy: keep module importable sans jax
+            keys = ops.f64_sort_keys(np.ascontiguousarray(self.node_mbr.T))
+            self._node_mbr_keys = keys
+        return keys
+
+    def _descend(self, boxes: np.ndarray, dist_norm,
+                 cs_path: np.ndarray, backend: str) -> np.ndarray:
+        """The fused device pass: one `ops.tree_descend` call replaces the
+        per-level frontier. boxes (B, M, 4) NaN-padded; bit-identical to
+        `_frontier` / `candidate_nodes_looped` (the box expansion and the
+        f64 -> int64 key map are exact, so the kernel's 32-bit plane
+        compares reproduce the host's f64 interval tests bit-for-bit)."""
+        from ..kernels import ops
+        d = (dist_norm if np.ndim(dist_norm) == 0
+             else np.asarray(dist_norm, dtype=np.float64)[:, None])
+        expanded = geometry.expand_boxes(boxes, d)          # (B, M, 4)
+        keys = ops.f64_sort_keys(expanded)
+        pad = ~np.isfinite(boxes[..., 0])                   # ragged padding
+        if pad.any():
+            keys[pad] = ops.DESCEND_PAD_BOX
+        return ops.tree_descend(self._node_key_planes(), cs_path, keys,
+                                backend=backend)
 
     def candidate_nodes_looped(self, driver_boxes: np.ndarray,
                                dist_norm: float, driven_cs: np.ndarray,

@@ -287,8 +287,17 @@ class QuadStore:
         return total
 
     # ------------------------------------------------------------------
-    def scan(self, g=None, s=None, p=None, o=None) -> np.ndarray:
-        """Range scan: returns matching rows as an (m, 4) (g,s,p,o) array."""
+    def scan(self, g=None, s=None, p=None, o=None,
+             return_order: bool = False):
+        """Range scan: returns matching rows as an (m, 4) (g,s,p,o) array.
+
+        With ``return_order=True`` also returns the tuple of column indices
+        the result rows are lexicographically sorted by — the chosen
+        permutation index's columns past the bound prefix (the prefix
+        columns are constant over the result, so they carry no order).
+        Residual equality filters preserve row order, so the guarantee
+        survives them.
+        """
         bound = {G: g, S: s, P: p, O: o}
         consts = [c for c, v in bound.items() if v is not None]
         best_name, best_prefix = "spog", 0
@@ -313,6 +322,8 @@ class QuadStore:
         for c in consts:
             if c not in prefix_cols:
                 rows = rows[rows[:, c] == bound[c]]
+        if return_order:
+            return rows, cols[best_prefix:]
         return rows
 
     def spatial_box_of(self, entity_ids: np.ndarray) -> np.ndarray:

@@ -24,8 +24,14 @@ comparison masks over the lane axis. The table is padded with int64-max
 sentinel planes, which compare strictly greater than any real probe
 (core/join.py packs keys into [0, 2^63-1)), so padding never counts. Work
 is O(M·N) compares versus O(M·log N) for the binary search, but it is all
-8x128 VPU compares with zero control flow; tiling the table axis through
-the grid (for tables past VMEM) is a follow-on.
+8x128 VPU compares with zero control flow.
+
+The table axis is tiled through the grid: each probe block's rank pair is
+an accumulator revisited across the table-tile axis (zeroed on the first
+tile via `pl.when`), so only one (bb-probe, tn-table) tile pair is VMEM
+resident at a time and relations past VMEM stream through on-chip instead
+of falling back. Tables that fit a single tile keep the old one-shot
+schedule (the tile clamps to the padded table size).
 """
 from __future__ import annotations
 
@@ -49,26 +55,39 @@ def _plane_lt_le(t_hi, t_lo, p_hi, p_lo):
 
 
 def _kernel(t_hi_ref, t_lo_ref, p_hi_ref, p_lo_ref, lo_ref, hi_ref):
-    lt, le = _plane_lt_le(t_hi_ref[...], t_lo_ref[...],   # (1, n_pad)
+    # the (bb, 1) rank pair is an accumulator revisited across the
+    # table-tile axis (out index map ignores program_id(1))
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    lt, le = _plane_lt_le(t_hi_ref[...], t_lo_ref[...],   # (1, tn)
                           p_hi_ref[...], p_lo_ref[...])   # (bb, 1)
-    lo_ref[...] = jnp.sum(lt.astype(jnp.int32), axis=1, keepdims=True)
-    hi_ref[...] = jnp.sum(le.astype(jnp.int32), axis=1, keepdims=True)
+    lo_ref[...] += jnp.sum(lt.astype(jnp.int32), axis=1, keepdims=True)
+    hi_ref[...] += jnp.sum(le.astype(jnp.int32), axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bb", "tn", "interpret"))
 def merge_join_ranks(t_hi: jnp.ndarray, t_lo: jnp.ndarray,
                      p_hi: jnp.ndarray, p_lo: jnp.ndarray,
-                     bb: int = 1024, interpret: bool = False
+                     bb: int = 1024, tn: int = 8192,
+                     interpret: bool = False
                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Counting rank pass over one probe batch.
 
     t_* (N,) / p_* (M,) int32 planes of sorted table keys / probe keys
     (see `ops.split_key_planes`; table sorted by the underlying int64).
+    `tn` bounds the VMEM-resident table tile (lane-rounded, clamped to the
+    padded table size so small tables stay single-tile).
     Returns (lo (M,), hi (M,)) int32 insertion ranks.
     """
     m = p_hi.shape[0]
     n = t_hi.shape[0]
-    n_pad = max(-(-n // 128) * 128, 128)
+    tn = max(-(-tn // 128) * 128, 128)
+    n128 = max(-(-n // 128) * 128, 128)
+    tn = min(tn, n128)
+    n_pad = -(-n128 // tn) * tn
     mp = max(-(-m // bb) * bb, bb)
     t_hi = jnp.pad(t_hi, (0, n_pad - n), constant_values=_SENT)
     t_lo = jnp.pad(t_lo, (0, n_pad - n), constant_values=_SENT)
@@ -76,15 +95,15 @@ def merge_join_ranks(t_hi: jnp.ndarray, t_lo: jnp.ndarray,
     p_lo = jnp.pad(p_lo, (0, mp - m))
     lo, hi = pl.pallas_call(
         _kernel,
-        grid=(mp // bb,),
+        grid=(mp // bb, n_pad // tn),
         in_specs=[
-            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
-            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
-            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
         ],
-        out_specs=[pl.BlockSpec((bb, 1), lambda i: (i, 0)),
-                   pl.BlockSpec((bb, 1), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bb, 1), lambda i, j: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((mp, 1), jnp.int32),
                    jax.ShapeDtypeStruct((mp, 1), jnp.int32)],
         interpret=interpret,

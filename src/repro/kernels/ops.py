@@ -21,6 +21,7 @@ from . import geom_refine as _gr
 from . import merge_join as _mj
 from . import morton_kernel as _mk
 from . import ref
+from . import tree_descend as _td
 
 
 def _on_tpu() -> bool:
@@ -192,6 +193,79 @@ def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
 @jax.jit
 def _ranks_ref_jit(t_hi, t_lo, p_hi, p_lo):
     return ref.merge_join_ranks_ref(t_hi, t_lo, p_hi, p_lo)
+
+
+def f64_sort_keys(x: np.ndarray) -> np.ndarray:
+    """IEEE-754 doubles -> order-isomorphic int64 sort keys (host, exact).
+
+    The classic total-order flip: positives keep their bit pattern with the
+    sign bit toggled, negatives are complemented; -0.0 is canonicalized to
+    +0.0 first so the two zero encodings stay equal. int64 comparisons on
+    the keys then agree bit-for-bit with f64 ``<=`` on the inputs, which
+    lets the 32-bit kernels run the engine's f64 box tests exactly. Finite
+    inputs map strictly inside (int64-min, int64-max), so both extremes
+    remain free for never-matching padding sentinels.
+    """
+    x = np.where(x == 0.0, 0.0, np.asarray(x, dtype=np.float64))
+    u = np.asarray(x, dtype=np.float64).view(np.uint64)
+    sign = np.uint64(1) << np.uint64(63)
+    key_u = np.where(u & sign != 0, ~u, u | sign)
+    return (key_u ^ sign).view(np.int64)
+
+
+# never-intersecting padding box in f64_sort_keys space: mins above every
+# real max key, maxs below every real min key (rows are x0, y0, x2, y3)
+DESCEND_PAD_BOX = np.array(
+    [(1 << 63) - 1, (1 << 63) - 1, -(1 << 63), -(1 << 63)], dtype=np.int64)
+
+
+def tree_descend(node_keys, cs_path, box_keys, backend: str = "kernel",
+                 interpret: bool | None = None):
+    """Fused Phase-1 candidate-node pass; see kernels/tree_descend.py.
+
+    node_keys (4, N) int64 `f64_sort_keys` planes of the node MBRs (rows
+    x0, y0, x2, y3); cs_path (N,) bool root-path Bloom verdicts; box_keys
+    (B, M, 4) int64 keys of the expanded driver boxes with padding rows
+    pre-set to `DESCEND_PAD_BOX`. Returns the (B, N) bool candidate masks.
+    backend: "kernel" (Pallas on TPU, jitted dense oracle on CPU) or
+    "interpret" (Pallas interpret mode, tests). The host frontier is the
+    "numpy" backend and never reaches this dispatch (core/squadtree.py).
+    """
+    if backend not in ("kernel", "interpret"):
+        raise ValueError(f"unknown tree-descend backend {backend!r}")
+    node_keys = np.asarray(node_keys, dtype=np.int64)
+    box_keys = np.asarray(box_keys, dtype=np.int64)
+    n = node_keys.shape[1]
+    b, m = box_keys.shape[0], box_keys.shape[1]
+    if n == 0 or b == 0:
+        return np.zeros((b, n), dtype=bool)
+    # pow2 size classes bound jit recompiles: padded blocks/boxes carry the
+    # never-intersecting sentinel box and are sliced off / ignored below
+    bp = 1 << max(int(b - 1).bit_length(), 0)
+    mp = 1 << max(int(m - 1).bit_length(), 3)
+    if bp != b or mp != m:
+        padded = np.empty((bp, mp, 4), dtype=np.int64)
+        padded[:] = DESCEND_PAD_BOX
+        padded[:b, :m] = box_keys
+        box_keys = padded
+    n_hi, n_lo = split_key_planes(node_keys)
+    b_hi, b_lo = split_key_planes(box_keys)
+    cs = np.asarray(cs_path).astype(np.int32)
+    if backend == "kernel" and not _on_tpu():
+        out = _descend_ref_jit(jnp.asarray(n_hi), jnp.asarray(n_lo),
+                               jnp.asarray(cs), jnp.asarray(b_hi),
+                               jnp.asarray(b_lo))
+    else:
+        out = _td.tree_descend(
+            jnp.asarray(n_hi), jnp.asarray(n_lo), jnp.asarray(cs),
+            jnp.asarray(b_hi), jnp.asarray(b_lo),
+            interpret=backend == "interpret" and not _on_tpu())
+    return np.asarray(out[:b]) != 0
+
+
+@jax.jit
+def _descend_ref_jit(n_hi, n_lo, cs, b_hi, b_lo):
+    return ref.tree_descend_ref(n_hi, n_lo, cs, b_hi, b_lo)
 
 
 def bloom_probe(bits, keys, k: int = 3, interpret: bool | None = None):

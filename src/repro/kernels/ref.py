@@ -106,6 +106,33 @@ def merge_join_ranks_ref(t_hi: jnp.ndarray, t_lo: jnp.ndarray,
             jnp.sum(le.astype(jnp.int32), axis=1))
 
 
+# ------------------------------------------------------------ tree descent --
+def tree_descend_ref(nodes_hi: jnp.ndarray, nodes_lo: jnp.ndarray,
+                     cs: jnp.ndarray, boxes_hi: jnp.ndarray,
+                     boxes_lo: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels/tree_descend.py: dense candidate-node masks.
+
+    nodes_* (4, N) int32 key planes of node MBRs (rows x0, y0, x2, y3);
+    cs (N,) int32 0/1 root-path Bloom mask; boxes_* (B, M, 4) planes of
+    expanded driver boxes. Materializes the (B, M, N) interval tests (the
+    specification, not the tiled implementation) and returns (B, N) int32:
+    any box intersecting the node MBR, masked by cs.
+    """
+    def le(a_hi, a_lo, b_hi, b_lo):
+        return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
+
+    def node(c):
+        return nodes_hi[c][None, None, :], nodes_lo[c][None, None, :]
+
+    def box(c):
+        return boxes_hi[:, :, c][:, :, None], boxes_lo[:, :, c][:, :, None]
+
+    hit = (le(*node(0), *box(2)) & le(*box(0), *node(2))
+           & le(*node(1), *box(3)) & le(*box(1), *node(3)))
+    any_hit = jnp.max(hit.astype(jnp.int32), axis=1)        # (B, N)
+    return any_hit & cs.astype(jnp.int32)[None, :]
+
+
 # -------------------------------------------------------------- bloom probe --
 def _mix32_jnp(x, seed: int):
     x = (x + jnp.uint32(0x9E3779B9) * jnp.uint32(seed + 1)).astype(jnp.uint32)

@@ -160,7 +160,9 @@ class SpatialServeEngine:
             # group), different tenants' groups ride the same batch, and
             # identical rows from same-shape tenants collapse to one row
             tree = self.engine.store.tree
+            policy = self.engine.config.policy
             boxes, cs_sets, prepared, dists, cards = [], [], [], [], []
+            cs_paths = []
             row_of: dict[tuple, int] = {}
             spans: list[tuple[int, list[int]]] = []
             for s, r in sip_slots:
@@ -179,12 +181,16 @@ class SpatialServeEngine:
                         prepared.append(r["prepared"])
                         dists.append(r["dist_norm"])
                         cards.append(r["card_all"])
+                        # tenants' precomputed root-path masks ride along so
+                        # fused descents skip the per-step Bloom probes
+                        cs_paths.append(r.get("cs_path"))
                     rows.append(idx)
                 spans.append((s, rows))
             in_v = tree.candidate_nodes(boxes, np.array(dists), cs_sets,
                                         prepared=prepared,
-                                        probe_backend=self.engine.config
-                                        .probe_backend)
+                                        probe_backend=policy.probe,
+                                        descend_backend=policy.descend,
+                                        cs_path=cs_paths)
             sel = node_select.select_batch(
                 tree, in_v, cs_sets, self.engine.config.select_params,
                 card_all=np.stack(cards))
@@ -195,7 +201,7 @@ class SpatialServeEngine:
 
         # ---- phase B: APS + driven retrieval + Phase-3 -------------------
         batcher = None
-        if self.engine.config.join_backend == "fused" \
+        if self.engine.config.policy.join == "fused" \
                 and self.engine.config.mbr_join_fn is None:
             batcher = _FusedJoinBatcher(self.engine.config.fused_batch_cols,
                                         tuner=self.engine.kcap_tuner)

@@ -175,3 +175,45 @@ def test_probe_backends_match_oracle(probe_backend):
 @pytest.mark.parametrize("rank_backend", [None, "numpy", "cpu"])
 def test_rank_backends_match_oracle(rank_backend):
     _check(0, _FIXED[1], rank_backend=rank_backend)
+
+
+@pytest.mark.parametrize("descend", ["numpy", "kernel", "interpret"])
+def test_descend_backends_match_oracle(descend):
+    from repro import BackendPolicy
+    _check(0, _FIXED[0], policy=BackendPolicy(descend=descend))
+
+
+# ------------------------------------- legacy knobs vs BackendPolicy form --
+# every legacy per-stage kwarg combination must be BIT-identical (same rows,
+# same order — not just same score multiset) to its policy equivalent
+_LEGACY_GRID = [
+    {"join_impl": "looped"},
+    {"join_backend": "fused", "kcap_auto": True},
+    {"probe_backend": "interpret", "rank_backend": "cpu"},
+    {"join_backend": "kernel", "join_impl": "merge", "rank_backend": "numpy"},
+]
+_STAGE_OF = {"join_backend": "join", "join_impl": "impl",
+             "probe_backend": "probe", "rank_backend": "rank"}
+
+
+@pytest.mark.parametrize("legacy", _LEGACY_GRID,
+                         ids=lambda d: "+".join(sorted(d)))
+def test_legacy_knobs_bit_identical_to_policy(legacy):
+    import warnings
+
+    from repro import BackendPolicy
+    stages = {("kcap" if k == "kcap_auto" else _STAGE_OF[k]):
+              (("auto" if v else "fixed") if k == "kcap_auto" else v)
+              for k, v in legacy.items()}
+    for shape in _FIXED:
+        q = _mk_query(0, *shape)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            got_l, rows_l, _ = _engine(0, fused_batch_cols=256,
+                                       **legacy).execute(q)
+        got_p, rows_p, _ = _engine(0, fused_batch_cols=256,
+                                   policy=BackendPolicy(**stages)).execute(q)
+        np.testing.assert_array_equal(got_l, got_p)
+        assert rows_l.keys() == rows_p.keys()
+        for c in rows_p:
+            np.testing.assert_array_equal(rows_l[c], rows_p[c])

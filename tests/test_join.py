@@ -205,3 +205,52 @@ def test_rank_kernel_grid_and_padding_sweep():
         host_lo, host_hi = mj.merge_join_ranks_host(t_hi, t_lo, p_hi, p_lo)
         np.testing.assert_array_equal(np.asarray(host_lo), np.asarray(want_lo))
         np.testing.assert_array_equal(np.asarray(host_hi), np.asarray(want_hi))
+
+
+# --------------------------------------- sortedness + packed-key caching ----
+def test_sorted_by_fast_path_bit_identical():
+    """A relation marked sorted by the join key skips the argsort via the
+    identity permutation — outputs must match the unmarked run exactly,
+    and the join output must carry the key mark itself."""
+    rng = np.random.default_rng(5)
+    xs = np.sort(rng.integers(0, 50, 400))
+    ps = rng.integers(0, 9, 400)
+    b = Relation({"x": rng.integers(0, 50, 300), "q": rng.integers(0, 9, 300)})
+    marked = Relation({"x": xs, "p": ps})
+    marked.sorted_by = ("x",)
+    plain = Relation({"x": xs.copy(), "p": ps.copy()})
+    out_m, out_p = J.join(marked, b), J.join(plain, b)
+    assert out_m.keys() == out_p.keys()
+    for c in out_p:
+        np.testing.assert_array_equal(out_m[c], out_p[c])
+    assert out_p.sorted_by == ("x",)
+    # column (re)assignment must conservatively drop the mark
+    out_p["p"] = out_p["p"].copy()
+    assert out_p.sorted_by == ()
+
+
+def test_keycache_warm_replay_and_window_fallback():
+    """Packed-key cache: a second join reusing one side must replay the
+    cached pack when the partner's values fit the packing window, fall back
+    to a joint repack when they don't — bit-identical either way."""
+    rng = np.random.default_rng(6)
+    a = Relation({"x": rng.integers(0, 40, 600), "p": rng.integers(0, 5, 600)})
+    b = Relation({"x": rng.integers(0, 40, 500), "q": rng.integers(0, 5, 500)})
+    in_win = Relation({"x": rng.integers(0, 40, 300),
+                       "r": rng.integers(0, 5, 300)})
+    out_win = Relation({"x": rng.integers(-900, 900, 300),
+                        "r": rng.integers(0, 5, 300)})
+    np_cold = {k: J.join_looped(a, v) for k, v in
+               (("b", b), ("in", in_win), ("out", out_win))}
+    warm_b = J.join(a, b)                       # populates a's pack cache
+    assert getattr(a, "_keycache", None), "first merge join must cache packs"
+    warm_in = J.join(a, in_win)                 # replays the cached pack
+    warm_out = J.join(a, out_win)               # window miss -> joint repack
+    for got, want in ((warm_b, np_cold["b"]), (warm_in, np_cold["in"]),
+                      (warm_out, np_cold["out"])):
+        assert got.keys() == want.keys()
+        for c in want:
+            np.testing.assert_array_equal(got[c], want[c])
+    # mutation invalidates the cache (stale packs would be unsound)
+    a["x"] = a["x"].copy()
+    assert not getattr(a, "_keycache", None)

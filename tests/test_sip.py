@@ -187,3 +187,73 @@ def test_engine_kernel_probe_backend_equivalent(lgd):
         lgd.store, ExecConfig(probe_backend="kernel")).execute(q)
     np.testing.assert_allclose(np.sort(got), np.sort(ref),
                                rtol=1e-9, atol=1e-12)
+
+
+# ------------------------------------------------- fused device descent ----
+@pytest.mark.parametrize("backend", ["kernel", "interpret"])
+def test_descend_backends_bit_identical_to_looped(backend):
+    """The fused device descent (tree_descend kernel / interpret mode) must
+    reproduce the level-synchronous host frontier — and thus the looped
+    oracle — exactly, across ragged batches including empty blocks."""
+    for seed in range(4):
+        rng = np.random.default_rng(100 + seed)
+        tree, boxes = _random_tree(rng)
+        box_sets = _random_batch(rng, tree, boxes)
+        driven_cs = np.unique(rng.integers(1, 8, size=3).astype(np.int64))
+        dist = float(rng.random() * 0.05)
+        ref = tree.candidate_nodes(box_sets, dist, driven_cs)
+        got = tree.candidate_nodes(box_sets, dist, driven_cs,
+                                   descend_backend=backend)
+        np.testing.assert_array_equal(got, ref)
+        for bi, bx in enumerate(box_sets):
+            np.testing.assert_array_equal(
+                got[bi], tree.candidate_nodes_looped(bx, dist, driven_cs))
+
+
+def test_descend_per_block_dist_and_precomputed_cs_path():
+    rng = np.random.default_rng(11)
+    tree, boxes = _random_tree(rng, n=400)
+    box_sets = _random_batch(rng, tree, boxes, b=4)
+    driven_cs = np.array([2, 4], dtype=np.int64)
+    dists = rng.random(4) * 0.05
+    ref = tree.candidate_nodes(box_sets, dists, driven_cs)
+    cs_path = tree.cs_path_mask(driven_cs)
+    got = tree.candidate_nodes(box_sets, dists, driven_cs,
+                               descend_backend="kernel", cs_path=cs_path)
+    np.testing.assert_array_equal(got, ref)
+    # multi-query form with an aligned per-row cs_path list (serve pooling)
+    cs_list = [driven_cs, np.array([1, 5], np.int64), driven_cs,
+               np.array([1, 5], np.int64)]
+    ref2 = tree.candidate_nodes(box_sets, dists, cs_list)
+    paths = [tree.cs_path_mask(c) for c in cs_list]
+    got2 = tree.candidate_nodes(box_sets, dists, cs_list,
+                                descend_backend="kernel", cs_path=paths)
+    np.testing.assert_array_equal(got2, ref2)
+
+
+def test_cs_path_mask_is_root_path_and_of_bloom_verdicts():
+    rng = np.random.default_rng(12)
+    tree, _ = _random_tree(rng, n=300)
+    driven_cs = np.array([1, 6], dtype=np.int64)
+    prep = tree.bloom_self.prepare(driven_cs)
+    node_hit = tree.bloom_self.contains_any_batch(
+        np.arange(tree.n_nodes, dtype=np.int64), prep, "numpy")
+    path = tree.cs_path_mask(driven_cs)
+    for n in range(tree.n_nodes):
+        expect, a = True, n
+        while True:
+            expect &= bool(node_hit[a])
+            if a == 0:
+                break
+            a = int(tree.node_parent[a])
+        assert path[n] == expect, n
+
+
+def test_engine_descend_backend_equivalent(lgd):
+    from repro import BackendPolicy
+    q = lgd.queries[2]
+    ref, _, _ = StreakEngine(lgd.store).execute(q)
+    got, _, _ = StreakEngine(lgd.store, ExecConfig(
+        policy=BackendPolicy(descend="kernel"))).execute(q)
+    np.testing.assert_allclose(np.sort(got), np.sort(ref),
+                               rtol=1e-9, atol=1e-12)
