@@ -24,6 +24,12 @@ And two serial baselines per mix:
 
 Every run asserts per-query results are bit-identical to serial execution.
 
+A third ``faulted`` row (fused config) re-runs the serve batch under a
+seeded 1% fault-injection plan at the kernel dispatch seam: the failover
+chains must absorb every injected failure with zero result drift, and the
+``throughput_ratio_vs_fault_free`` derived metric tracks the recovery
+overhead (the acceptance floor is 0.8).
+
 Standalone: ``python -m benchmarks.bench_serve --json`` writes
 ``BENCH_serve.json`` (the artifact CI uploads).
 """
@@ -34,6 +40,7 @@ import dataclasses
 import numpy as np
 
 from repro import BackendPolicy, ExecConfig, StreakEngine
+from repro.core import fault
 from repro.serve.spatial import SpatialServeEngine
 
 from . import common
@@ -102,6 +109,37 @@ def run() -> list:
             rows.append(common.row(
                 f"serve/lgd/{mname}/{cname}_serial_warm"
                 f"_{N_CONCURRENT}q", t_warm, ""))
+
+            if cname != "fused":
+                continue
+            # ---- fault-injected serving: seeded 1% failures at the kernel
+            # dispatch seam; failover absorbs them bit-identically and the
+            # throughput ratio vs the fault-free run tracks the overhead ---
+            def serve_faulted():
+                fault.STATE.reset()
+                # seed picked so the 1% rate actually lands hits in both
+                # mixes' dispatch streams (hotq makes only ~65 op calls)
+                fault.install_plan(fault.FaultPlan(rate=0.01, seed=8))
+                try:
+                    srv = SpatialServeEngine(ds.store, cfg,
+                                             max_slots=MAX_SLOTS)
+                    reqs = srv.serve(queries)
+                    return srv, reqs, fault.STATE.plan.injected
+                finally:
+                    fault.STATE.reset()
+
+            fsrv, freqs, injected = serve_faulted()
+            assert injected > 0, "1% plan must actually fire at bench scale"
+            assert all(r.error is None for r in freqs)
+            _assert_identical(freqs, serial)
+            t_fault = common.timeit(lambda: serve_faulted()[1])
+            rows.append(common.row(
+                f"serve/lgd/{mname}/{cname}_batched_{N_CONCURRENT}q_faulted",
+                t_fault,
+                f"injected={injected}"
+                f";throughput_ratio_vs_fault_free="
+                f"{t_srv / max(t_fault, 1):.2f}"
+                f";bit_identical=true"))
     return rows
 
 

@@ -14,12 +14,13 @@ Subsystem internals (kernels, planner, serving loop, baselines) stay
 importable under their module paths (`repro.core.*`, `repro.kernels.*`,
 `repro.serve.*`) but are not covered by this surface.
 """
-from .core import (BackendPolicy, ExecConfig, ExecStats, Query, QuadStore,
-                   Ranking, Relation, SpatialFilter, StreakEngine,
-                   TriplePattern, Var, build_store)
+from .core import (BackendPolicy, ExecConfig, ExecStats, FaultPlan,
+                   FaultRule, Query, QuadStore, QueryDeadline, Ranking,
+                   Relation, SpatialFilter, StreakEngine, TriplePattern,
+                   Var, build_store)
 
 __all__ = [
-    "BackendPolicy", "ExecConfig", "ExecStats", "Query", "QuadStore",
-    "Ranking", "Relation", "SpatialFilter", "StreakEngine", "TriplePattern",
-    "Var", "build_store",
+    "BackendPolicy", "ExecConfig", "ExecStats", "FaultPlan", "FaultRule",
+    "Query", "QuadStore", "QueryDeadline", "Ranking", "Relation",
+    "SpatialFilter", "StreakEngine", "TriplePattern", "Var", "build_store",
 ]

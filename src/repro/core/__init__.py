@@ -7,15 +7,17 @@ Public surface:
 - engine: Query AST (query), planner, APS (aps), block executor (executor),
   top-k (topk), spatial join phases (spatial_join)
 - baselines: sync R-tree join, full-scan engine (baselines, rtree)
+- fault tolerance: failover chains, breakers, deadlines, injection (fault)
 """
 from .executor import ExecConfig, ExecStats, StreakEngine  # noqa: F401
+from .fault import FaultPlan, FaultRule, QueryDeadline  # noqa: F401
 from .join import Relation  # noqa: F401
 from .policy import BackendPolicy  # noqa: F401
 from .query import Query, Ranking, SpatialFilter, TriplePattern, Var  # noqa: F401
 from .store import QuadStore, build_store  # noqa: F401
 
 __all__ = [
-    "BackendPolicy", "ExecConfig", "ExecStats", "Query", "QuadStore",
-    "Ranking", "Relation", "SpatialFilter", "StreakEngine", "TriplePattern",
-    "Var", "build_store",
+    "BackendPolicy", "ExecConfig", "ExecStats", "FaultPlan", "FaultRule",
+    "Query", "QuadStore", "QueryDeadline", "Ranking", "Relation",
+    "SpatialFilter", "StreakEngine", "TriplePattern", "Var", "build_store",
 ]

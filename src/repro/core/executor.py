@@ -91,6 +91,13 @@ class ExecStats:
     driven_rows_after_sip: int = 0
     results_considered: int = 0
     early_terminated: bool = False
+    # anytime-results contract (core/fault.QueryDeadline): `partial` marks a
+    # deadline-truncated answer; `score_bound` is the certified key-space
+    # bound — no result outside the returned set has a key above it (for a
+    # complete run it is simply the final θ)
+    partial: bool = False
+    deadline_expired: bool = False
+    score_bound: float | None = None
     v_star_sizes: list = dataclasses.field(default_factory=list)
     join: JoinStats = dataclasses.field(default_factory=JoinStats)
     plan_log: list = dataclasses.field(default_factory=list)
@@ -278,16 +285,17 @@ class StreakEngine:
             topk.push(keys, out)
 
     # ------------------------------------------------------------------
-    def execute(self, q: Query) -> tuple[np.ndarray, Relation, ExecStats]:
-        cur = QueryCursor(self, q)
+    def execute(self, q: Query, deadline=None
+                ) -> tuple[np.ndarray, Relation, ExecStats]:
+        cur = QueryCursor(self, q, deadline=deadline)
         while not cur.done:
             cur.step()
         return cur.results()
 
-    def cursor(self, q: Query) -> "QueryCursor":
+    def cursor(self, q: Query, deadline=None) -> "QueryCursor":
         """Steppable execution state (one driver block per step) for the
         multi-tenant serving loop (serve/spatial.py)."""
-        return QueryCursor(self, q)
+        return QueryCursor(self, q, deadline=deadline)
 
     # ------------------------------------------------------------------
     def _driven_full(self, driven: SidePlan, impl: str | None,
@@ -396,8 +404,9 @@ class QueryCursor:
     blocks from different queries interleave.
     """
 
-    def __init__(self, engine: StreakEngine, q: Query):
+    def __init__(self, engine: StreakEngine, q: Query, deadline=None):
         self.engine = engine
+        self.deadline = deadline            # core/fault.QueryDeadline | None
         cfg = engine.config
         store = engine.store
         self.tree = store.tree
@@ -444,13 +453,20 @@ class QueryCursor:
         self.done = True
 
     def results(self) -> tuple[np.ndarray, Relation, ExecStats]:
+        """Scores/rows of the TopK plus stats. Always safe to call: on a
+        deadline-truncated cursor (``stats.partial``) the returned set is
+        the anytime answer and ``stats.score_bound`` certifies it — no
+        result outside the set has a key above the bound."""
         keys, rows = self.topk.results()
         scores = keys if self.plan.descending else -keys
+        if self.stats.score_bound is None and self.done:
+            # complete run: every candidate was seen, θ is the exact bound
+            self.stats.score_bound = float(self.topk.theta)
         return scores, rows, self.stats
 
     # -- shared per-block pieces ----------------------------------------
     def _block_guard(self, b: int) -> bool:
-        """Early-termination check; False ⟹ the query is finished."""
+        """Early-termination + deadline check; False ⟹ query finished."""
         if self.driver.scan is not None:
             dpb = self.kw_p * float(self.driver.scan.get_block(b)[0][0])
         else:  # no numeric driver: no driver bound
@@ -459,6 +475,19 @@ class QueryCursor:
         ub = dpb + self.driver_other + self.driven_bound
         if self.topk.full and ub <= self.topk.theta:
             self.stats.early_terminated = True
+            self._finish()
+            return False
+        if self.deadline is not None \
+                and self.deadline.expired(self.stats.driver_blocks):
+            # stop admitting driver blocks: the current TopK is the anytime
+            # answer. Unseen pairs (block >= b) are bounded by ub (blocks
+            # arrive in score-key order, so ub is non-increasing); pairs
+            # seen but dropped from the heap are bounded by θ — the max
+            # certifies every unreturned result (θ is -inf until the heap
+            # fills, in which case nothing was dropped and ub alone binds).
+            self.stats.deadline_expired = True
+            self.stats.partial = True
+            self.stats.score_bound = max(float(self.topk.theta), ub)
             self._finish()
             return False
         return True

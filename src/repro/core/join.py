@@ -212,16 +212,46 @@ def _params_fit(rel: Relation, on: list[str], params: tuple) -> bool:
     return True
 
 
+# Per-Relation `_keycache` budget. Each entry holds the packed keys plus the
+# sorting permutation (two int64 arrays the length of the relation), so an
+# unbounded cache on a long-lived scan-cache relation grows with every
+# distinct `on` tuple it is ever joined by. Insertion order doubles as
+# recency order (hits are re-inserted at the end), so eviction is LRU.
+KEYCACHE_MAX_ENTRIES = 8
+KEYCACHE_MAX_BYTES = 1 << 27        # 128 MiB of cached keys+perms per Relation
+
+
+def _cache_nbytes(ent) -> int:
+    return ent[2].nbytes + ent[3].nbytes
+
+
 def _cached_pack(rel: Relation, on_t: tuple):
     cache = rel.__dict__.get("_keycache")
-    return cache.get(on_t) if cache else None
+    if not cache:
+        return None
+    ent = cache.get(on_t)
+    if ent is not None:             # touch: move to the recent end
+        cache.pop(on_t)
+        cache[on_t] = ent
+    return ent
 
 
 def _store_pack(rel: Relation, on_t: tuple, params, scale: int,
                 ks: np.ndarray, perm: np.ndarray) -> None:
-    if params is not None:
-        rel.__dict__.setdefault("_keycache", {}).setdefault(
-            on_t, (params, scale, ks, perm))
+    if params is None:
+        return
+    cache = rel.__dict__.setdefault("_keycache", {})
+    if on_t in cache:               # keep the first packing, but touch it
+        cache[on_t] = cache.pop(on_t)
+        return
+    cache[on_t] = (params, scale, ks, perm)
+    # evict least-recently-used entries beyond the budget; the fresh entry
+    # (at the recent end) always survives, even when alone over-budget
+    while len(cache) > 1 and (
+            len(cache) > KEYCACHE_MAX_ENTRIES
+            or sum(_cache_nbytes(e) for e in cache.values())
+            > KEYCACHE_MAX_BYTES):
+        cache.pop(next(iter(cache)))
 
 
 def _sorted_keys(rel: Relation, k: np.ndarray, scale: int,

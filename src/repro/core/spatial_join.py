@@ -257,6 +257,12 @@ class StreamEntry:
     `emit(pi, pj)` receives candidate-pair batches (indices into the
     original driver/driven arrays) and is expected to refine + push them
     into the query's TopK so the next `theta_fn()` read is tighter.
+
+    `error` is the crash-isolation channel: an exception in one entry's
+    per-span work (overflow recovery, emit/refine) lands here and retires
+    only that entry from subsequent launches — the other entries' streams
+    proceed. A faulted entry's TopK may hold a partial batch, so the owner
+    must restart the query from a fresh cursor, not resume it.
     """
     driver_boxes: np.ndarray
     driven_boxes: np.ndarray
@@ -267,6 +273,7 @@ class StreamEntry:
     theta_fn: object                  # () -> float, the query's live θ
     emit: object                      # (pi, pj) -> None
     stats: JoinStats | None = None
+    error: Exception | None = None    # set ⟹ entry retired by a fault
 
 
 def fused_stream_join_multi(entries: list[StreamEntry],
@@ -309,6 +316,8 @@ def fused_stream_join_multi(entries: list[StreamEntry],
             self.pos = 0
 
         def live(self) -> bool:
+            if self.e.error is not None:
+                return False
             if self.m == 0 or self.pos >= self.n:
                 return False
             theta = float(self.e.theta_fn())
@@ -364,12 +373,20 @@ def fused_stream_join_multi(entries: list[StreamEntry],
             col_l.append(np.zeros((n_pad, 4), np.float32))
             ck_l.append(np.full(n_pad, -np.inf, np.float32))
             cq_l.append(np.full(n_pad, -2, np.int32))
-        scores, idx, counts = kops.fused_topk_join(
-            np.concatenate(drv_l), np.concatenate(col_l),
-            np.concatenate(ds_l), np.concatenate(ck_l),
-            np.concatenate(dist_l), np.concatenate(th_l), k=kcap,
-            row_qid=np.concatenate(rq_l), col_qid=np.concatenate(cq_l),
-            interpret=interpret)
+        try:
+            scores, idx, counts = kops.fused_topk_join(
+                np.concatenate(drv_l), np.concatenate(col_l),
+                np.concatenate(ds_l), np.concatenate(ck_l),
+                np.concatenate(dist_l), np.concatenate(th_l), k=kcap,
+                row_qid=np.concatenate(rq_l), col_qid=np.concatenate(cq_l),
+                interpret=interpret)
+        except Exception as exc:    # noqa: BLE001 — whole-launch failure
+            # the shared launch died past the failover chain: every rider
+            # faults (their owners restart from fresh cursors); entries not
+            # in this launch are untouched
+            for c, *_ in spans:
+                c.e.error = exc
+            continue
         idx = np.asarray(idx)
         counts = np.asarray(counts)
         launches += 1
@@ -377,36 +394,41 @@ def fused_stream_join_multi(entries: list[StreamEntry],
             tuner.update(counts)
         for c, r0, c0, ncols, theta32 in spans:
             e = c.e
-            eidx = idx[r0:r0 + c.m]
-            ecnt = counts[r0:r0 + c.m]
-            if e.stats is not None:
-                e.stats.pairs_tested += c.m * ncols
-            ok_rows = ecnt <= kcap
-            sel = (eidx >= 0) & ok_rows[:, None]
-            pi = np.nonzero(sel)[0].astype(np.int64)
-            # qid masking confines survivors to this entry's column span
-            pj_local = eidx[sel].astype(np.int64) - c0
-            over = np.flatnonzero(~ok_rows)
-            if len(over):
+            try:
+                eidx = idx[r0:r0 + c.m]
+                ecnt = counts[r0:r0 + c.m]
                 if e.stats is not None:
-                    e.stats.overflow_rows += len(over)
-                    e.stats.overflow_batches += 1
-                chunk = c.dvn[c.pos:c.pos + ncols]
-                ck = c.vs[c.pos:c.pos + ncols]
-                d = np.asarray(kops.distance_join_matrix(
-                    c.drv[over], chunk, interpret=interpret))
-                bound = c.ds[over][:, None] + ck[None, :]
-                oi, oj = np.nonzero((d <= np.float32(e.dist_norm))
-                                    & (bound > theta32))
-                pi = np.concatenate([pi, over[oi].astype(np.int64)])
-                pj_local = np.concatenate([pj_local, oj.astype(np.int64)])
-            if len(pi):
-                pj = c.order[c.pos + pj_local]
-                srt = np.lexsort((pj, pi))
-                pi, pj = pi[srt], pj[srt]
-                if e.stats is not None:
-                    e.stats.candidates += len(pi)
-                e.emit(pi, pj)
+                    e.stats.pairs_tested += c.m * ncols
+                ok_rows = ecnt <= kcap
+                sel = (eidx >= 0) & ok_rows[:, None]
+                pi = np.nonzero(sel)[0].astype(np.int64)
+                # qid masking confines survivors to this entry's column span
+                pj_local = eidx[sel].astype(np.int64) - c0
+                over = np.flatnonzero(~ok_rows)
+                if len(over):
+                    if e.stats is not None:
+                        e.stats.overflow_rows += len(over)
+                        e.stats.overflow_batches += 1
+                    chunk = c.dvn[c.pos:c.pos + ncols]
+                    ck = c.vs[c.pos:c.pos + ncols]
+                    d = np.asarray(kops.distance_join_matrix(
+                        c.drv[over], chunk, interpret=interpret))
+                    bound = c.ds[over][:, None] + ck[None, :]
+                    oi, oj = np.nonzero((d <= np.float32(e.dist_norm))
+                                        & (bound > theta32))
+                    pi = np.concatenate([pi, over[oi].astype(np.int64)])
+                    pj_local = np.concatenate([pj_local, oj.astype(np.int64)])
+                if len(pi):
+                    pj = c.order[c.pos + pj_local]
+                    srt = np.lexsort((pj, pi))
+                    pi, pj = pi[srt], pj[srt]
+                    if e.stats is not None:
+                        e.stats.candidates += len(pi)
+                    e.emit(pi, pj)
+            except Exception as exc:    # noqa: BLE001 — per-entry isolation
+                # one entry's overflow recovery / emit / refine crashed:
+                # retire it (owner restarts it) and keep the others going
+                e.error = exc
             c.pos += ncols
     return launches
 

@@ -3,6 +3,15 @@
 On TPU the Pallas path compiles natively; on CPU we use interpret mode (for
 tests) or the jnp reference (for the engine's `kernel` backend), keeping one
 call site for both worlds.
+
+Every query-path op here runs through `core/fault.run_op`: the dispatch is
+an ordered failover chain (live route → interpret → oracle) so an exception,
+watchdog timeout, or detected corruption in one backend degrades to the next
+bit-identical one instead of failing the query. Per-(op, backend) circuit
+breakers remember repeated failures; `BackendPolicy.resolve` consults them
+so later plans skip a broken backend at plan time. The chains cost one
+function call and a dict probe per *dispatch* (per driver block, not per
+row); the structural validators only run when a `FaultPlan` is installed.
 """
 from __future__ import annotations
 
@@ -12,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import fault as _fault
 from . import block_scan as _bs
 from . import bloom_probe as _bp
 from . import distance_join as _dj
@@ -28,13 +38,32 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _v_dist_matrix(out) -> bool:
+    a = np.asarray(out)
+    return bool(np.isfinite(a).all() and (a >= 0).all())
+
+
 def distance_join_matrix(driver, driven, interpret: bool | None = None):
     driver = jnp.asarray(driver, dtype=jnp.float32)
     driven = jnp.asarray(driven, dtype=jnp.float32)
+
+    def oracle():
+        return ref.distance_join_ref(driver, driven)
+
     if _on_tpu() or interpret:
-        return _dj.distance_join(driver, driven,
-                                 interpret=bool(interpret) and not _on_tpu())
-    return ref.distance_join_ref(driver, driven)
+        live = "interpret" if (interpret and not _on_tpu()) else "kernel"
+        attempts = [
+            (live, lambda: _dj.distance_join(
+                driver, driven, interpret=bool(interpret) and not _on_tpu())),
+            ("oracle", oracle),
+        ]
+    else:
+        # numpy-free CPU route: the jnp oracle is already the live backend;
+        # the trailing attempt retries the same pure function (recovers
+        # injected/transient failures, not deterministic ones)
+        attempts = [("jit", oracle), ("oracle", oracle)]
+    return _fault.run_op("distance_join_matrix", attempts,
+                         validate=_v_dist_matrix)
 
 
 def distance_join_mask(driver, driven, dist: float,
@@ -69,13 +98,32 @@ def fused_topk_join(driver, driven, driver_keys, driven_keys,
           else jnp.asarray(row_qid, dtype=jnp.int32))
     cq = (jnp.zeros(n, jnp.int32) if col_qid is None
           else jnp.asarray(col_qid, dtype=jnp.int32))
+    def oracle():
+        return _fused_ref_jit(driver, driven, dk, vk, dist_arr, theta_arr,
+                              rq, cq, k)
+
     if _on_tpu() or interpret:
-        return _ftj.fused_topk_join(
-            driver, driven, dk, vk, dist_arr, theta_arr, k=k,
-            row_qid=rq, col_qid=cq,
-            interpret=bool(interpret) and not _on_tpu())
-    return _fused_ref_jit(driver, driven, dk, vk, dist_arr, theta_arr,
-                          rq, cq, k)
+        live = "interpret" if (interpret and not _on_tpu()) else "kernel"
+        attempts = [
+            (live, lambda: _ftj.fused_topk_join(
+                driver, driven, dk, vk, dist_arr, theta_arr, k=k,
+                row_qid=rq, col_qid=cq,
+                interpret=bool(interpret) and not _on_tpu())),
+            ("oracle", oracle),
+        ]
+    else:
+        attempts = [("jit", oracle), ("oracle", oracle)]
+    return _fault.run_op("fused_topk_join", attempts,
+                         validate=functools.partial(_v_fused, n=n))
+
+
+def _v_fused(out, n: int) -> bool:
+    # counts are *survivor* totals (they exceed k on overflow — that is the
+    # recovery signal) so the structural bound is the column count
+    scores, _, counts = out
+    c = np.asarray(counts)
+    return bool(not np.isnan(np.asarray(scores)).any()
+                and (c >= 0).all() and (c <= n).all())
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -94,13 +142,28 @@ def bucketed_min_core(a_planes, b_planes, interpret: bool | None = None):
     (core/spatial_join.py::core_to_dist)."""
     a_planes = tuple(jnp.asarray(p, dtype=jnp.float32) for p in a_planes)
     b_planes = tuple(jnp.asarray(p, dtype=jnp.float32) for p in b_planes)
+
+    def host():
+        # CPU: the loop-structured host twin (kernel numerics, no (B, m, n)
+        # cube); ref.bucketed_min_core_ref stays the test oracle
+        return _gr.bucketed_min_core_host(a_planes, b_planes)
+
     if _on_tpu() or interpret:
-        return _gr.bucketed_min_core(
-            a_planes, b_planes,
-            interpret=bool(interpret) and not _on_tpu())
-    # CPU: the loop-structured host twin (kernel numerics, no (B, m, n)
-    # cube); ref.bucketed_min_core_ref stays the test oracle
-    return _gr.bucketed_min_core_host(a_planes, b_planes)
+        live = "interpret" if (interpret and not _on_tpu()) else "kernel"
+        attempts = [
+            (live, lambda: _gr.bucketed_min_core(
+                a_planes, b_planes,
+                interpret=bool(interpret) and not _on_tpu())),
+            ("oracle", host),
+        ]
+    else:
+        attempts = [("jit", host), ("oracle", host)]
+    return _fault.run_op("bucketed_min_core", attempts, validate=_v_min_core)
+
+
+def _v_min_core(out) -> bool:
+    a = np.asarray(out)
+    return bool(np.isfinite(a).all() and (a >= 0).all())
 
 
 # Rank-pass backend dispatch for the relational merge join (core/join.py).
@@ -155,32 +218,51 @@ def merge_join_ranks(table, probes, backend: str | None = None,
     if len(table) == 0 or m == 0:
         z = np.zeros(m, dtype=np.int64)
         return (z, z.copy()) if side == "both" else z
-    if backend == "numpy":
+
+    def numpy_ranks():
         if side != "both":
             return np.searchsorted(table, probes, side)
         return (np.searchsorted(table, probes, "left"),
                 np.searchsorted(table, probes, "right"))
-    # pow2 size classes bound jit recompiles; the int64-max sentinel compares
-    # greater than every probe, so table padding never changes a rank, and
-    # padded probe rows are sliced off below
-    t_hi, t_lo = split_key_planes(_pad_pow2(table, (1 << 63) - 1))
-    p_hi, p_lo = split_key_planes(_pad_pow2(probes, 0))
-    if backend == "cpu":
-        out = _mj.merge_join_ranks_host(t_hi, t_lo, p_hi, p_lo, side=side)
-        if side != "both":
-            return np.asarray(out[:m]).astype(np.int64)
-        lo, hi = out
-    elif backend == "kernel" and not _on_tpu():
-        lo, hi = _ranks_ref_jit(jnp.asarray(t_hi), jnp.asarray(t_lo),
-                                jnp.asarray(p_hi), jnp.asarray(p_lo))
+
+    if backend == "numpy":
+        attempts = [("numpy", numpy_ranks), ("oracle", numpy_ranks)]
     else:
-        lo, hi = _mj.merge_join_ranks(
-            jnp.asarray(t_hi), jnp.asarray(t_lo),
-            jnp.asarray(p_hi), jnp.asarray(p_lo),
-            interpret=backend == "interpret" and not _on_tpu())
-    lo = np.asarray(lo[:m]).astype(np.int64)
-    hi = np.asarray(hi[:m]).astype(np.int64)
-    return (lo, hi) if side == "both" else (lo if side == "left" else hi)
+        def accel(backend=backend):
+            # pow2 size classes bound jit recompiles; the int64-max sentinel
+            # compares greater than every probe, so table padding never
+            # changes a rank, and padded probe rows are sliced off below
+            t_hi, t_lo = split_key_planes(_pad_pow2(table, (1 << 63) - 1))
+            p_hi, p_lo = split_key_planes(_pad_pow2(probes, 0))
+            if backend == "cpu":
+                out = _mj.merge_join_ranks_host(t_hi, t_lo, p_hi, p_lo,
+                                                side=side)
+                if side != "both":
+                    return np.asarray(out[:m]).astype(np.int64)
+                lo, hi = out
+            elif backend == "kernel" and not _on_tpu():
+                lo, hi = _ranks_ref_jit(jnp.asarray(t_hi), jnp.asarray(t_lo),
+                                        jnp.asarray(p_hi), jnp.asarray(p_lo))
+            else:
+                lo, hi = _mj.merge_join_ranks(
+                    jnp.asarray(t_hi), jnp.asarray(t_lo),
+                    jnp.asarray(p_hi), jnp.asarray(p_lo),
+                    interpret=backend == "interpret" and not _on_tpu())
+            lo = np.asarray(lo[:m]).astype(np.int64)
+            hi = np.asarray(hi[:m]).astype(np.int64)
+            return ((lo, hi) if side == "both"
+                    else (lo if side == "left" else hi))
+
+        attempts = [(backend, accel), ("oracle", numpy_ranks)]
+    return _fault.run_op(
+        "merge_join_ranks", attempts,
+        validate=functools.partial(_v_ranks, n=len(table), side=side))
+
+
+def _v_ranks(out, n: int, side: str) -> bool:
+    lo, hi = out if side == "both" else (out, out)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    return bool((lo >= 0).all() and (hi <= n).all() and (lo <= hi).all())
 
 
 def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
@@ -251,16 +333,29 @@ def tree_descend(node_keys, cs_path, box_keys, backend: str = "kernel",
     n_hi, n_lo = split_key_planes(node_keys)
     b_hi, b_lo = split_key_planes(box_keys)
     cs = np.asarray(cs_path).astype(np.int32)
+
+    def oracle():
+        return _descend_ref_jit(jnp.asarray(n_hi), jnp.asarray(n_lo),
+                                jnp.asarray(cs), jnp.asarray(b_hi),
+                                jnp.asarray(b_lo))
+
     if backend == "kernel" and not _on_tpu():
-        out = _descend_ref_jit(jnp.asarray(n_hi), jnp.asarray(n_lo),
-                               jnp.asarray(cs), jnp.asarray(b_hi),
-                               jnp.asarray(b_lo))
+        attempts = [("kernel", oracle), ("oracle", oracle)]
     else:
-        out = _td.tree_descend(
-            jnp.asarray(n_hi), jnp.asarray(n_lo), jnp.asarray(cs),
-            jnp.asarray(b_hi), jnp.asarray(b_lo),
-            interpret=backend == "interpret" and not _on_tpu())
+        attempts = [
+            (backend, lambda: _td.tree_descend(
+                jnp.asarray(n_hi), jnp.asarray(n_lo), jnp.asarray(cs),
+                jnp.asarray(b_hi), jnp.asarray(b_lo),
+                interpret=backend == "interpret" and not _on_tpu())),
+            ("oracle", oracle),
+        ]
+    out = _fault.run_op("tree_descend", attempts, validate=_v_mask01)
     return np.asarray(out[:b]) != 0
+
+
+def _v_mask01(out) -> bool:
+    a = np.asarray(out)
+    return bool(a.size == 0 or (a.min() >= 0 and a.max() <= 1))
 
 
 @jax.jit
@@ -275,10 +370,24 @@ def bloom_probe(bits, keys, k: int = 3, interpret: bool | None = None):
                      .view(np.int32))
     hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32).view(np.int32))
     bits = jnp.asarray(bits)
+
+    def oracle():
+        # int verdict plane (not bool) so corrupt-injection has an
+        # out-of-domain value for the validator to catch
+        return jnp.asarray(ref.bloom_probe_ref(bits, lo, hi, k), jnp.int32)
+
     if _on_tpu() or interpret:
-        return _bp.bloom_probe(bits, lo, hi, k=k,
-                               interpret=bool(interpret) and not _on_tpu()) == 1
-    return ref.bloom_probe_ref(bits, lo, hi, k)
+        live = "interpret" if (interpret and not _on_tpu()) else "kernel"
+        attempts = [
+            (live, lambda: _bp.bloom_probe(
+                bits, lo, hi, k=k,
+                interpret=bool(interpret) and not _on_tpu())),
+            ("oracle", oracle),
+        ]
+    else:
+        attempts = [("jit", oracle), ("oracle", oracle)]
+    out = _fault.run_op("bloom_probe", attempts, validate=_v_mask01)
+    return np.asarray(out) == 1
 
 
 def block_scan(scores, theta: float, interpret: bool | None = None):

@@ -22,6 +22,17 @@ What actually batches across tenants per step:
 θ pruning is sound at any batching granularity, so per-query results are
 bit-identical to serial `StreakEngine.execute` runs — the stress tests
 assert exactly that.
+
+Fault tolerance (core/fault.py holds the primitives): each slot's
+`begin_block`/`finish_block` is crash-isolated, so one tenant's exception
+retires only that request — transient failures (`fault.TRANSIENT`) restart
+from a FRESH cursor after an exponential tick backoff (a faulted cursor's
+TopK may hold a partial batch; resuming it could double-push), permanent
+ones land on `SpatialRequest.error` with empty results. A poisoned pooled
+Phase-1/2 call falls back to per-slot serial execution for that step, and a
+faulted entry in the shared Phase-3 batch (`StreamEntry.error`) faults only
+its rider. Per-request `QueryDeadline`s pass through to the cursor, so an
+expired tenant retires with `stats.partial` anytime results.
 """
 from __future__ import annotations
 
@@ -29,7 +40,7 @@ import dataclasses
 
 import numpy as np
 
-from ..core import node_select, spatial_join
+from ..core import fault, node_select, spatial_join
 from ..core.executor import ExecStats, QueryCursor, StreakEngine
 from ..core.join import Relation
 from ..core.query import Query
@@ -45,6 +56,10 @@ class SpatialRequest:
     done: bool = False
     steps: int = 0                  # engine steps this request stayed active
     waited: int = 0                 # engine steps spent queued
+    deadline: fault.QueryDeadline | None = None
+    error: Exception | None = None  # set ⟹ retired by a permanent failure
+    retries: int = 0                # fresh-cursor restarts consumed
+    not_before: int = 0             # earliest engine tick re-admission runs
 
 
 @dataclasses.dataclass
@@ -57,6 +72,13 @@ class ServeStats:
     sip_blocks: int = 0             # driver blocks covered by those calls
     join_launches: int = 0          # cross-query fused kernel launches
     max_queue: int = 0
+    faults: int = 0                 # slot exceptions caught (any phase)
+    retries: int = 0                # transient faults re-queued with backoff
+    failed_requests: int = 0        # requests retired with an error
+    admission_failures: int = 0     # cursor construction raised in _admit
+    pooled_fallbacks: int = 0       # pooled Phase-1/2 → per-slot serial
+    share_evictions: int = 0        # FIFO share-cache entry evictions
+    deadline_partials: int = 0      # requests retired with partial results
 
 
 class _FusedJoinBatcher:
@@ -87,7 +109,8 @@ class SpatialServeEngine:
     `PreparedKeys`, and the kcap autotuner are shared by every tenant.
     """
 
-    def __init__(self, store, config=None, max_slots: int = 8):
+    def __init__(self, store, config=None, max_slots: int = 8,
+                 max_retries: int = 2, share_cache_max: int = 1024):
         self.engine = StreakEngine(store, config)
         # tenants running the same query shape (a hot query with per-user
         # k, say) share θ-independent per-block work: driver-block
@@ -97,25 +120,70 @@ class SpatialServeEngine:
         # of it per tenant.
         self.engine.share_cache = {}
         self.max_slots = max_slots
+        self.max_retries = max_retries
+        self.share_cache_max = share_cache_max
         self.slots: list[tuple[SpatialRequest, QueryCursor] | None] = \
             [None] * max_slots
         self.queue: list[SpatialRequest] = []
         self.stats = ServeStats()
         self._slot_used = [False] * max_slots
+        self._tick = 0                  # backoff clock: one tick per step()
 
     # ------------------------------------------------------------------
     def submit(self, req: SpatialRequest) -> None:
         self.queue.append(req)
 
+    def _fail(self, req: SpatialRequest, exc: Exception) -> None:
+        """Retire `req` with `exc` surfaced and well-typed empty results —
+        never silently dropped, never poisoning other tenants."""
+        req.error = exc
+        req.scores = np.empty(0)
+        req.rows = Relation()
+        req.stats = ExecStats()
+        req.done = True
+        self.stats.failed_requests += 1
+
+    def _fault_slot(self, slot: int, exc: Exception) -> None:
+        """One tenant crashed: free its slot, and either re-queue it for a
+        fresh-cursor restart (transient failures, bounded exponential tick
+        backoff) or retire it with the error surfaced. A faulted cursor is
+        always discarded — its TopK may hold a partial emit batch, so only
+        a restart from scratch preserves bit-identicality."""
+        req, _ = self.slots[slot]
+        self.slots[slot] = None
+        self.stats.faults += 1
+        if isinstance(exc, fault.TRANSIENT) and req.retries < self.max_retries:
+            req.retries += 1
+            self.stats.retries += 1
+            req.not_before = self._tick + (1 << (req.retries - 1))
+            self.queue.insert(0, req)   # it was admitted earliest: run next
+        else:
+            self._fail(req, exc)
+
     def _admit(self) -> None:
         for slot in range(self.max_slots):
-            if self.slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[slot] = (req, self.engine.cursor(req.query))
+            if self.slots[slot] is not None:
+                continue
+            i = 0
+            while i < len(self.queue):
+                req = self.queue[i]
+                if req.not_before > self._tick:   # backing off: skip, keep
+                    i += 1
+                    continue
+                self.queue.pop(i)
+                try:
+                    cur = self.engine.cursor(req.query,
+                                             deadline=req.deadline)
+                except Exception as exc:    # noqa: BLE001 — surface per-req
+                    self.stats.admission_failures += 1
+                    self._fail(req, exc)
+                    continue                # next queued request, same slot
+                self.slots[slot] = (req, cur)
                 self.stats.admissions += 1
                 if self._slot_used[slot]:
                     self.stats.slot_reuse += 1
                 self._slot_used[slot] = True
+                break
 
     def _retire(self, slot: int) -> None:
         req, cur = self.slots[slot]
@@ -123,13 +191,42 @@ class SpatialServeEngine:
         req.done = True
         if cur.stats.early_terminated:
             self.stats.released_early += 1
+        if cur.stats.partial:
+            self.stats.deadline_partials += 1
         self.slots[slot] = None
 
     # ------------------------------------------------------------------
+    def _slot_sip(self, r: dict) -> list:
+        """Per-slot serial Phase-1/2 (the pooled call's degraded mode): the
+        same candidate_nodes + select_batch, one tenant's rows only."""
+        tree = self.engine.store.tree
+        policy = self.engine.config.policy
+        boxes = [b if b is not None else np.zeros((0, 4))
+                 for b in r["boxes"]]
+        n = len(boxes)
+        in_v = tree.candidate_nodes(boxes, np.full(n, r["dist_norm"]),
+                                    [r["driven_cs"]] * n,
+                                    prepared=[r["prepared"]] * n,
+                                    probe_backend=policy.probe,
+                                    descend_backend=policy.descend,
+                                    cs_path=[r.get("cs_path")] * n)
+        sel = node_select.select_batch(
+            tree, in_v, [r["driven_cs"]] * n,
+            self.engine.config.select_params,
+            card_all=np.stack([r["card_all"]] * n))
+        self.stats.sip_batches += 1
+        self.stats.sip_blocks += n
+        return list(sel)
+
     def step(self) -> int:
         """One iteration: admit, advance every active slot one driver block
         (Phases 1-2 pooled, Phase 3 cross-query batched), retire finished
-        queries. Returns the number of active slots this step."""
+        queries. Returns the number of active slots this step.
+
+        Every per-slot phase is crash-isolated: an exception advances only
+        that slot to `_fault_slot` (restart or retire) while the rest of the
+        step proceeds."""
+        self._tick += 1
         self._admit()
         self.stats.max_queue = max(self.stats.max_queue, len(self.queue))
         active = [s for s in range(self.max_slots)
@@ -146,7 +243,11 @@ class SpatialServeEngine:
         work: list[tuple[int, dict]] = []        # (slot, request)
         for s in active:
             req, cur = self.slots[s]
-            sip_req = cur.begin_block()
+            try:
+                sip_req = cur.begin_block()
+            except Exception as exc:    # noqa: BLE001 — isolate the tenant
+                self._fault_slot(s, exc)
+                continue
             if sip_req is None:                  # finished (θ or exhausted)
                 self._retire(s)
                 continue
@@ -186,18 +287,30 @@ class SpatialServeEngine:
                         cs_paths.append(r.get("cs_path"))
                     rows.append(idx)
                 spans.append((s, rows))
-            in_v = tree.candidate_nodes(boxes, np.array(dists), cs_sets,
-                                        prepared=prepared,
-                                        probe_backend=policy.probe,
-                                        descend_backend=policy.descend,
-                                        cs_path=cs_paths)
-            sel = node_select.select_batch(
-                tree, in_v, cs_sets, self.engine.config.select_params,
-                card_all=np.stack(cards))
-            for s, rows in spans:
-                v_stars[s] = [sel[i] for i in rows]
-            self.stats.sip_batches += 1
-            self.stats.sip_blocks += len(boxes)
+            try:
+                in_v = tree.candidate_nodes(boxes, np.array(dists), cs_sets,
+                                            prepared=prepared,
+                                            probe_backend=policy.probe,
+                                            descend_backend=policy.descend,
+                                            cs_path=cs_paths)
+                sel = node_select.select_batch(
+                    tree, in_v, cs_sets, self.engine.config.select_params,
+                    card_all=np.stack(cards))
+                for s, rows in spans:
+                    v_stars[s] = [sel[i] for i in rows]
+                self.stats.sip_batches += 1
+                self.stats.sip_blocks += len(boxes)
+            except Exception:       # noqa: BLE001 — poisoned pooled call
+                # one tenant's rows poisoned the shared batch: degrade to
+                # per-slot serial Phase-1/2 for this step, so only the
+                # culprit faults and the rest keep their V* (bit-identical:
+                # candidate_nodes/select_batch are per-row functions)
+                self.stats.pooled_fallbacks += 1
+                for s, r in sip_slots:
+                    try:
+                        v_stars[s] = self._slot_sip(r)
+                    except Exception as exc:    # noqa: BLE001
+                        self._fault_slot(s, exc)
 
         # ---- phase B: APS + driven retrieval + Phase-3 -------------------
         batcher = None
@@ -205,19 +318,46 @@ class SpatialServeEngine:
                 and self.engine.config.mbr_join_fn is None:
             batcher = _FusedJoinBatcher(self.engine.config.fused_batch_cols,
                                         tuner=self.engine.kcap_tuner)
+        entry_spans: dict[int, slice] = {}       # slot -> its batcher entries
         for s, _ in work:
+            if self.slots[s] is None:            # faulted in phase A
+                continue
             req, cur = self.slots[s]
-            cur.finish_block(v_stars[s], batcher=batcher)
+            n0 = len(batcher.entries) if batcher is not None else 0
+            try:
+                cur.finish_block(v_stars[s], batcher=batcher)
+            except Exception as exc:    # noqa: BLE001 — isolate the tenant
+                if batcher is not None:          # roll back registrations
+                    del batcher.entries[n0:]
+                self._fault_slot(s, exc)
+                continue
+            if batcher is not None:
+                entry_spans[s] = slice(n0, len(batcher.entries))
         if batcher is not None:
-            self.stats.join_launches += batcher.flush()
+            entries = list(batcher.entries)
+            try:
+                self.stats.join_launches += batcher.flush()
+            except Exception as exc:    # noqa: BLE001 — launch-level crash
+                for e in entries:
+                    if e.error is None:
+                        e.error = exc
+            # faulted entries (StreamEntry.error) fault only their riders
+            for s, span in entry_spans.items():
+                errs = [e.error for e in entries[span] if e.error is not None]
+                if errs and self.slots[s] is not None:
+                    self._fault_slot(s, errs[0])
         for s, _ in work:
-            if self.slots[s][1].done:
+            if self.slots[s] is not None and self.slots[s][1].done:
                 self._retire(s)
-        # bound the cross-tenant memo (entries hold relations); sharing is
-        # overwhelmingly within-step, so a coarse reset loses little
+        # bound the cross-tenant memo (entries hold relations) with
+        # insertion-order eviction: dicts iterate oldest-first, so popping
+        # from the front drops the stalest per-block results while this
+        # step's hot entries survive
         sc = self.engine.share_cache
-        if sc is not None and len(sc) > 1024:
-            sc.clear()
+        if sc is not None:
+            while len(sc) > self.share_cache_max:
+                sc.pop(next(iter(sc)))
+                self.stats.share_evictions += 1
         return len(active)
 
     def run(self) -> None:

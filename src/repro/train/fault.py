@@ -9,6 +9,16 @@
   checkpoint/restart gives bit-identical resume.
 - `run_with_recovery`: restart-on-exception wrapper around a step closure
   with bounded retries and checkpoint-based state restore.
+
+The query-path counterpart is `core/fault.py`: the same ideas — per-call
+watchdog (`fault.watchdog` / `OpTimeout` vs `StepGuard` /
+`StragglerTimeout`), deterministic injection (`fault.FaultPlan` vs
+`FailureInjector`), bounded restart (`SpatialServeEngine`'s fresh-cursor
+retries vs `run_with_recovery`) — applied per kernel dispatch and per
+served query instead of per training step, plus the pieces that only make
+sense there: bit-identical backend failover chains, per-(op, backend)
+circuit breakers consulted at plan time, and `QueryDeadline` anytime
+results certified by the live θ bound.
 """
 from __future__ import annotations
 

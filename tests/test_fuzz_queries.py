@@ -11,16 +11,41 @@ pruning bug in core/geometry.py.)
 
 Runs under real `hypothesis` when installed, or the fallback shim in
 tests/_hypothesis_fallback.py (seeded random sampling) otherwise.
+
+Set ``STREAK_FAULT_RATE`` (e.g. 0.02) to run the whole module under seeded
+random fault injection at the kernel dispatch seam — the failover chains
+must keep every differential property bit-identical. CI's faultlane job
+does exactly this.
 """
+import os
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import fault
 from repro.core.baselines import FullScanEngine
 from repro.core.executor import ExecConfig, StreakEngine
 from repro.core.query import Query, Ranking, SpatialFilter, TriplePattern, Var
 from repro.data.synth_rdf import make_lgd
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fault_rate_from_env():
+    """Optional module-wide fault injection (CI faultlane): every op chain
+    sees a seeded `rate` of primary-attempt failures and must recover
+    bit-identically through its fallbacks."""
+    rate = float(os.environ.get("STREAK_FAULT_RATE", "0") or 0)
+    if rate <= 0:
+        yield
+        return
+    fault.STATE.reset()
+    fault.install_plan(fault.FaultPlan(rate=rate, seed=7))
+    try:
+        yield
+    finally:
+        fault.STATE.reset()
 
 # class -> extra (pa/pb-attached) predicates available for pattern-count
 # fuzzing; mirrors the synth_rdf LGD catalog

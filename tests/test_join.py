@@ -254,3 +254,47 @@ def test_keycache_warm_replay_and_window_fallback():
     # mutation invalidates the cache (stale packs would be unsound)
     a["x"] = a["x"].copy()
     assert not getattr(a, "_keycache", None)
+
+
+def test_keycache_lru_entry_budget_and_touch(monkeypatch):
+    """The per-Relation pack cache is bounded: beyond the entry budget the
+    least-recently-used packing is evicted, a cache hit refreshes recency,
+    and every join stays bit-identical while entries churn."""
+    monkeypatch.setattr(J, "KEYCACHE_MAX_ENTRIES", 3)
+    rng = np.random.default_rng(7)
+    a = Relation({f"x{i}": rng.integers(0, 30, 200) for i in range(5)})
+    partners = [Relation({f"x{i}": rng.integers(0, 30, 80),
+                          f"p{i}": rng.integers(0, 5, 80)})
+                for i in range(5)]
+    want = [J.join_looped(a, p) for p in partners]
+
+    def check(i):
+        got = J.join(a, partners[i])
+        assert got.keys() == want[i].keys()
+        for c in want[i]:
+            np.testing.assert_array_equal(got[c], want[i][c])
+
+    for i in range(3):
+        check(i)
+    assert list(a._keycache) == [("x0",), ("x1",), ("x2",)]
+    check(3)                                    # over budget: x0 is LRU, out
+    assert list(a._keycache) == [("x1",), ("x2",), ("x3",)]
+    check(1)                                    # hit: x1 moves to recent end
+    assert list(a._keycache) == [("x2",), ("x3",), ("x1",)]
+    check(4)                                    # now x2 is the LRU victim
+    assert list(a._keycache) == [("x3",), ("x1",), ("x4",)]
+
+
+def test_keycache_byte_budget_keeps_fresh_entry(monkeypatch):
+    """Under an impossibly small byte cap the freshly stored pack still
+    survives (evicting the entry just built would defeat the replay), so
+    the cache degenerates to exactly the most recent packing."""
+    monkeypatch.setattr(J, "KEYCACHE_MAX_BYTES", 1)
+    rng = np.random.default_rng(8)
+    a = Relation({f"x{i}": rng.integers(0, 30, 150) for i in range(2)})
+    b0 = Relation({"x0": rng.integers(0, 30, 60)})
+    b1 = Relation({"x1": rng.integers(0, 30, 60)})
+    J.join(a, b0)
+    assert list(a._keycache) == [("x0",)]
+    J.join(a, b1)
+    assert list(a._keycache) == [("x1",)]       # fresh survives, LRU evicted

@@ -119,9 +119,9 @@ def test_legacy_and_policy_engines_bit_identical(lgd):
 
 # ------------------------------------------------------------- public API ---
 PUBLIC_API = (
-    "BackendPolicy", "ExecConfig", "ExecStats", "QuadStore", "Query",
-    "Ranking", "Relation", "SpatialFilter", "StreakEngine", "TriplePattern",
-    "Var", "build_store",
+    "BackendPolicy", "ExecConfig", "ExecStats", "FaultPlan", "FaultRule",
+    "QuadStore", "Query", "QueryDeadline", "Ranking", "Relation",
+    "SpatialFilter", "StreakEngine", "TriplePattern", "Var", "build_store",
 )
 
 

@@ -90,6 +90,44 @@ def test_slot_reuse_and_no_starvation(lgd, mixed_queries):
         assert r.waited < st.steps
 
 
+def test_no_starvation_under_adversarial_long_short_mix(lgd):
+    """Adversarial mix: two scan-heavy tenants (huge k never θ-terminates)
+    submitted FIRST, six tiny-k tenants queued behind them on 2 slots. FIFO
+    admission must keep the documented bound — every request runs and waits
+    strictly less than the global step count — and admission order must
+    follow submission order (waited non-decreasing), so the short queries
+    are never starved by the long ones re-claiming slots."""
+    long_q = [dataclasses.replace(lgd.queries[0], k=10 ** 6),
+              dataclasses.replace(lgd.queries[1], k=10 ** 6)]
+    short_q = [dataclasses.replace(q, k=3) for q in lgd.queries[2:]]
+    serial = _serial(lgd.store, ExecConfig(), long_q + short_q)
+    srv = SpatialServeEngine(lgd.store, ExecConfig(), max_slots=2)
+    reqs = srv.serve(long_q + short_q)
+    st = srv.stats
+    assert all(r.done and r.error is None for r in reqs)
+    for r in reqs:
+        assert 1 <= r.steps <= st.steps
+        assert r.waited < st.steps          # the documented waited bound
+    # FIFO: an earlier submission never waits longer than a later one
+    waits = [r.waited for r in reqs]
+    assert waits == sorted(waits)
+    for req, (scores, _) in zip(reqs, serial):
+        np.testing.assert_array_equal(req.scores, scores)
+
+
+def test_share_cache_fifo_eviction_counts_and_stays_bounded(lgd, mixed_queries):
+    """The >max memo bound evicts insertion-order (oldest per-block results
+    first) instead of clearing wholesale, and counts what it dropped."""
+    cfg = ExecConfig()
+    serial = _serial(lgd.store, cfg, mixed_queries)
+    srv = SpatialServeEngine(lgd.store, cfg, max_slots=3, share_cache_max=8)
+    reqs = srv.serve(mixed_queries)
+    assert srv.stats.share_evictions > 0
+    assert len(srv.engine.share_cache) <= 8
+    for req, (scores, _) in zip(reqs, serial):   # eviction never changes results
+        np.testing.assert_array_equal(req.scores, scores)
+
+
 def test_theta_termination_releases_slots_midflight(lgd, mixed_queries):
     srv = SpatialServeEngine(lgd.store, ExecConfig(), max_slots=3)
     reqs = srv.serve(mixed_queries)
