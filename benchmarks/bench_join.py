@@ -167,6 +167,42 @@ def merge_join_micro() -> list:
     return rows
 
 
+def rank_stream() -> list:
+    """Rank-pass streaming microbench: tables past the VMEM tile budget.
+
+    The double-buffered kernel (kernels/merge_join.py) leaves the table
+    planes in HBM and streams 8192-key tiles through a two-slot VMEM
+    scratch, issuing tile j+1's DMA before tile j's compare pass — these
+    rows sweep the table from VMEM-resident (1 tile) to 128 tiles so the
+    >VMEM regime is on record. `interpret` rows run the actual Pallas
+    streaming schedule (interpreter, CPU) and validate it at every size;
+    they measure schedule correctness, not TPU throughput — `numpy` /
+    `cpu` are the host baselines at each size.
+    """
+    rows = []
+    rng = np.random.default_rng(11)
+    m = 4096
+    tn = 8192
+    for n in (1 << 13, 1 << 17, 1 << 20):
+        table = np.sort(rng.integers(0, 1 << 62, n))
+        probes = rng.integers(0, 1 << 62, m)
+        probes[: m // 8] = table[:: max(n // (m // 8), 1)][: m // 8]
+        want_lo = np.searchsorted(table, probes, "left")
+        want_hi = np.searchsorted(table, probes, "right")
+        n_tiles = -(-n // tn)
+        backends = ("numpy", "cpu") + (("interpret",) if n <= 1 << 17 else ())
+        for backend in backends:
+            lo, hi = kops.merge_join_ranks(table, probes, backend=backend)
+            np.testing.assert_array_equal(np.asarray(lo), want_lo)
+            np.testing.assert_array_equal(np.asarray(hi), want_hi)
+            t = common.timeit(lambda: kops.merge_join_ranks(
+                table, probes, backend=backend))
+            rows.append(common.row(
+                f"merge_join/rank_n{n}_m{m}_{backend}", t,
+                f"tiles={n_tiles};vmem_scratch_bytes={2 * 2 * tn * 4}"))
+    return rows
+
+
 def engine_backends() -> list:
     """End-to-end engine time per Phase-3 backend on one dataset/query."""
     rows = []
@@ -182,6 +218,7 @@ def engine_backends() -> list:
 
 def run() -> list:
     rows = merge_join_micro()
+    rows += rank_stream()
     rows += fused_vs_matrix()
     rows += engine_backends()
     for ds_name in ("yago3", "lgd"):

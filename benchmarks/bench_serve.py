@@ -30,18 +30,26 @@ chains must absorb every injected failure with zero result drift, and the
 ``throughput_ratio_vs_fault_free`` derived metric tracks the recovery
 overhead (the acceptance floor is 0.8).
 
+The ``openloop`` section drives the same serve loop open-loop: requests
+arrive on a fixed virtual-time schedule at an offered load set as a
+fraction of the measured closed-loop capacity (0.5x / 0.8x / 1.2x),
+independent of completions, so queueing delay is part of the measured
+latency. Per load it reports mean and p50/p95/p99 latency — the 1.2x row
+shows the queue growing (p99 >> p50), the 0.5x row the uncongested floor.
+
 Standalone: ``python -m benchmarks.bench_serve --json`` writes
 ``BENCH_serve.json`` (the artifact CI uploads).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro import BackendPolicy, ExecConfig, StreakEngine
 from repro.core import fault
-from repro.serve.spatial import SpatialServeEngine
+from repro.serve.spatial import SpatialRequest, SpatialServeEngine
 
 from . import common
 
@@ -140,6 +148,63 @@ def run() -> list:
                 f";throughput_ratio_vs_fault_free="
                 f"{t_srv / max(t_fault, 1):.2f}"
                 f";bit_identical=true"))
+    rows += openloop(ds)
+    return rows
+
+
+OPENLOOP_N_REQ = 48
+OPENLOOP_LOADS = (0.5, 0.8, 1.2)
+
+
+def openloop(ds) -> list:
+    """Open-loop arrival-rate sweep: latency percentiles vs offered load.
+
+    Arrivals advance on a virtual clock fed by the measured wall time of
+    each `step()` call — request i arrives at ``i / offered_qps`` whether
+    or not the loop has kept up, so above capacity the queue (and the tail
+    latency) grows, which a closed-loop batch bench can never show.
+    """
+    cfg = CONFIGS["fused"]
+    queries = _mixes(ds)["mixed"]
+
+    def batch():
+        return SpatialServeEngine(ds.store, cfg,
+                                  max_slots=MAX_SLOTS).serve(queries)
+
+    batch()                                            # warm jit caches
+    t_batch = common.timeit(batch, warmup=0, repeat=3)
+    cap_qps = len(queries) / (t_batch / 1e6)
+    rows = [common.row("serve/lgd/openloop/capacity", t_batch,
+                       f"closed_loop_qps={cap_qps:.1f}")]
+    n = OPENLOOP_N_REQ
+    for frac in OPENLOOP_LOADS:
+        qps = cap_qps * frac
+        arrivals = np.arange(n) / qps                  # virtual seconds
+        srv = SpatialServeEngine(ds.store, cfg, max_slots=MAX_SLOTS)
+        reqs = [SpatialRequest(rid=i, query=queries[i % len(queries)])
+                for i in range(n)]
+        now, nxt = 0.0, 0
+        done_at: dict[int, float] = {}
+        while len(done_at) < n:
+            while nxt < n and arrivals[nxt] <= now:
+                srv.submit(reqs[nxt])
+                nxt += 1
+            if not any(srv.slots) and not srv.queue:
+                now = arrivals[nxt]                    # idle: jump ahead
+                continue
+            t0 = time.perf_counter()
+            srv.step()
+            now += time.perf_counter() - t0
+            for r in reqs[:nxt]:
+                if r.done and r.rid not in done_at:
+                    done_at[r.rid] = now
+        assert all(r.error is None for r in reqs)
+        lat = np.array([done_at[i] - arrivals[i] for i in range(n)]) * 1e6
+        p50, p95, p99 = (np.percentile(lat, p) for p in (50, 95, 99))
+        rows.append(common.row(
+            f"serve/lgd/openloop/load{frac:g}x", float(lat.mean()),
+            f"offered_qps={qps:.1f};p50_us={p50:.0f};p95_us={p95:.0f};"
+            f"p99_us={p99:.0f};n_req={n};max_queue={srv.stats.max_queue}"))
     return rows
 
 

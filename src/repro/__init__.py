@@ -16,11 +16,12 @@ importable under their module paths (`repro.core.*`, `repro.kernels.*`,
 """
 from .core import (BackendPolicy, ExecConfig, ExecStats, FaultPlan,
                    FaultRule, Query, QuadStore, QueryDeadline, Ranking,
-                   Relation, SpatialFilter, StreakEngine, TriplePattern,
-                   Var, build_store)
+                   Relation, ShardedQuadStore, SpatialFilter, StreakEngine,
+                   TriplePattern, Var, build_store, shard_store)
 
 __all__ = [
     "BackendPolicy", "ExecConfig", "ExecStats", "FaultPlan", "FaultRule",
     "Query", "QuadStore", "QueryDeadline", "Ranking", "Relation",
-    "SpatialFilter", "StreakEngine", "TriplePattern", "Var", "build_store",
+    "ShardedQuadStore", "SpatialFilter", "StreakEngine", "TriplePattern",
+    "Var", "build_store", "shard_store",
 ]

@@ -8,16 +8,19 @@ Public surface:
   top-k (topk), spatial join phases (spatial_join)
 - baselines: sync R-tree join, full-scan engine (baselines, rtree)
 - fault tolerance: failover chains, breakers, deadlines, injection (fault)
+- scale-out: Morton-prefix sharding + compressed E-list tier (shard)
 """
 from .executor import ExecConfig, ExecStats, StreakEngine  # noqa: F401
 from .fault import FaultPlan, FaultRule, QueryDeadline  # noqa: F401
 from .join import Relation  # noqa: F401
 from .policy import BackendPolicy  # noqa: F401
 from .query import Query, Ranking, SpatialFilter, TriplePattern, Var  # noqa: F401
+from .shard import ShardedQuadStore, shard_store  # noqa: F401
 from .store import QuadStore, build_store  # noqa: F401
 
 __all__ = [
     "BackendPolicy", "ExecConfig", "ExecStats", "FaultPlan", "FaultRule",
     "Query", "QuadStore", "QueryDeadline", "Ranking", "Relation",
-    "SpatialFilter", "StreakEngine", "TriplePattern", "Var", "build_store",
+    "ShardedQuadStore", "SpatialFilter", "StreakEngine", "TriplePattern",
+    "Var", "build_store", "shard_store",
 ]

@@ -73,6 +73,36 @@ def cs_id_of_predicate_sets(pred_lists: list[np.ndarray]) -> np.ndarray:
     return out
 
 
+def _cs_ids_segmented(p: np.ndarray, starts: np.ndarray,
+                      ends: np.ndarray) -> np.ndarray:
+    """CS ids for segments of a (within-segment sorted) predicate column.
+
+    Bit-identical to `cs_id_of_predicate_sets` applied per segment, but
+    vectorized ACROSS segments: the hash chain is sequential in the j-th
+    distinct predicate, so the loop runs over j (max distinct preds per
+    subject — single digits) instead of over subjects.
+    """
+    n_seg = len(starts)
+    out = np.full(n_seg, np.uint64(0x243F6A8885A308D3))
+    if len(p) == 0 or n_seg == 0:
+        return (out & np.uint64(0x7FFFFFFFFFFFFFFF)).astype(np.int64)
+    p = np.asarray(p, dtype=np.int64)
+    # within-segment dedup (p is sorted inside each segment; a boundary
+    # repeating the previous segment's last value must survive)
+    keep = np.ones(len(p), dtype=bool)
+    keep[1:] = p[1:] != p[:-1]
+    keep[starts] = True
+    idx = np.flatnonzero(keep)
+    seg = np.searchsorted(starts, idx, side="right") - 1
+    cnt = np.bincount(seg, minlength=n_seg)
+    first = np.concatenate([[0], np.cumsum(cnt)[:-1]])
+    for j in range(int(cnt.max(initial=0))):
+        sel = cnt > j
+        pj = p[idx[first[sel] + j]].astype(np.uint64)
+        out[sel] = _mix(out[sel] ^ pj, 17)
+    return (out & np.uint64(0x7FFFFFFFFFFFFFFF)).astype(np.int64)
+
+
 def compute_characteristic_sets(subjects: np.ndarray, predicates: np.ndarray
                                 ) -> tuple[np.ndarray, np.ndarray]:
     """Per-distinct-subject CS ids from (subject, predicate) columns.
@@ -83,8 +113,7 @@ def compute_characteristic_sets(subjects: np.ndarray, predicates: np.ndarray
     s, p = subjects[order], predicates[order]
     uniq, starts = np.unique(s, return_index=True)
     ends = np.append(starts[1:], len(s))
-    cs = cs_id_of_predicate_sets([p[a:b] for a, b in zip(starts, ends)])
-    return uniq, cs
+    return uniq, _cs_ids_segmented(p, starts, ends)
 
 
 def cs_catalog(subjects: np.ndarray, predicates: np.ndarray) -> dict:
@@ -95,11 +124,13 @@ def cs_catalog(subjects: np.ndarray, predicates: np.ndarray) -> dict:
     s, p = subjects[order], predicates[order]
     uniq, starts = np.unique(s, return_index=True)
     ends = np.append(starts[1:], len(s))
+    cs = _cs_ids_segmented(p, starts, ends)
     catalog: dict = {}
-    for a, b in zip(starts, ends):
-        preds = frozenset(int(x) for x in np.unique(p[a:b]))
-        cid = int(cs_id_of_predicate_sets([p[a:b]])[0])
-        catalog[cid] = preds
+    # one frozenset per DISTINCT CS id (subjects sharing a CS share it)
+    _, firsts = np.unique(cs, return_index=True)
+    for i in firsts:
+        a, b = starts[i], ends[i]
+        catalog[int(cs[i])] = frozenset(int(x) for x in np.unique(p[a:b]))
     return catalog
 
 

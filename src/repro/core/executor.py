@@ -14,7 +14,7 @@ from typing import Callable
 
 import numpy as np
 
-from . import aps, node_select, spatial_join
+from . import aps, node_select, shard as shard_mod, spatial_join
 from .join import Relation, filter_in_ranges, join, scan_pattern
 from .planner import QueryPlan, SidePlan, plan_query
 from .policy import BackendPolicy
@@ -421,19 +421,31 @@ class QueryCursor:
             self.driven, self.plan.descending, exclude_primary=False)
         self.kw_p = (engine._kw(self.driver.primary[2], self.plan.descending)
                      if self.driver.primary else 0.0)
-        # per-query (block-invariant) driven-CS cardinality per tree node
-        self.card_all = self.tree.cs_stats.cardinality_all(self.plan.driven_cs)
+        # Morton-prefix shard views: one no-clip view on an unsharded
+        # store (the literal old code path), the store's shard list on a
+        # ShardedQuadStore. SIP disabled ⟹ no interval filtering, so the
+        # per-shard loop would replicate the driven side — collapse to the
+        # single global view instead.
+        self.shards = (shard_mod.shard_views(store) if cfg.use_sip
+                       else shard_mod.whole_view(store)) \
+            if store.tree is not None else []
+        # per-query (block-invariant) driven-CS cardinality per shard node
+        self.card_all = [sh.tree.cs_stats.cardinality_all(self.plan.driven_cs)
+                         for sh in self.shards]
         # query-invariant probe material: driven-CS keys hashed once and
-        # reused by every frontier level of every window
+        # reused by every frontier level of every window; `prepare` is pure
+        # in (keys, bloom geometry) and the shard builder copies the global
+        # Bloom geometry, so ONE prepared serves every shard
         self.prepared = (self.tree.bloom_self.prepare(self.plan.driven_cs)
                          if cfg.use_sip else None)
         # fused-descent routes probe the Bloom root paths ONCE per query
         # (block/box-independent, see SQuadTree.cs_path_mask) instead of
-        # once per frontier level of every lookahead window
+        # once per frontier level of every lookahead window — per shard
         self.cs_path = (
-            self.tree.cs_path_mask(self.plan.driven_cs,
-                                   prepared=self.prepared,
-                                   probe_backend=self.plan.probe_backend)
+            [sh.tree.cs_path_mask(self.plan.driven_cs,
+                                  prepared=self.prepared,
+                                  probe_backend=self.plan.probe_backend)
+             for sh in self.shards]
             if cfg.use_sip and self.plan.descend_backend != "numpy" else None)
         self.window = max(int(cfg.sip_lookahead), 1) if cfg.use_sip else 1
         self._drv_sig = engine._side_sig(self.driver, self.plan)
@@ -521,19 +533,18 @@ class QueryCursor:
     def _sip_prefetch(self, b0: int) -> None:
         """Phases 1-2 for a `sip_lookahead` window of driver blocks: one
         batched candidate-node search + node selection, shared Bloom-row
-        gathers and MBR tests across blocks. Speculative work past an early
-        termination cut is discarded — the per-block guard is unchanged."""
-        cfg, plan, tree = self.engine.config, self.plan, self.tree
+        gathers and MBR tests across blocks (per shard). Speculative work
+        past an early termination cut is discarded — the per-block guard is
+        unchanged."""
+        cfg, plan = self.engine.config, self.plan
         mats = self._materialize_window(b0)
         if cfg.use_sip:
             box_sets = [bx if bx is not None else np.zeros((0, 4))
                         for (_, _, _, bx) in mats]
-            in_v = tree.candidate_nodes(
-                box_sets, plan.dist_norm, plan.driven_cs,
-                prepared=self.prepared, probe_backend=plan.probe_backend,
-                descend_backend=plan.descend_backend, cs_path=self.cs_path)
-            v_stars = node_select.select_batch(
-                tree, in_v, plan.driven_cs, cfg.select_params, self.card_all)
+            v_stars = shard_mod.sip_select(
+                self.shards, box_sets, plan.dist_norm, plan.driven_cs,
+                self.prepared, plan.probe_backend, plan.descend_backend,
+                self.cs_path, cfg.select_params, self.card_all)
             for (w, _, _, _), v_star in zip(mats, v_stars):
                 self._vstars[w] = v_star
 
@@ -553,40 +564,57 @@ class QueryCursor:
         REGISTERED with the cross-query batcher instead of running here —
         the batcher's emit callback refines + scores + pushes into this
         cursor's TopK so θ tightens between shared kernel launches.
+
+        ``v_star`` is a per-shard list aligned with ``self.shards``. The
+        shard-clipped SIP intervals partition the driven result set, so
+        sweeping shards sequentially and re-reading θ before each shard's
+        APS `key_needed` (global-θ exchange) is exact: earlier shards'
+        pushes only tighten later shards' pruning, never change the union.
         """
         eng = self.engine
-        cfg, plan, tree = eng.config, self.plan, self.tree
+        cfg, plan = eng.config, self.plan
+        driven = self.driven
+        topk, stats = self.topk, self.stats
+        if cfg.use_sip and all(len(v) == 0 for v in v_star):
+            return  # nothing on the driven side can join this block
+        stats.v_star_sizes.append(sum(len(v) for v in v_star))
+        for si, sh in enumerate(self.shards):
+            if cfg.use_sip and len(v_star[si]) == 0:
+                continue
+            intervals, explicit = sh.filter_material(v_star[si])
+
+            # ---- APS plan decision ----------------------------------
+            # θ re-read per shard: the cross-shard pruning exchange
+            key_needed = (topk.theta
+                          - (self._driver_primary_best + self.driver_other)
+                          - eng._side_bound(driven, plan.descending, True)) \
+                if topk.full else -np.inf
+            decision = aps.choose(sh.tree, v_star[si], plan.driven_cs,
+                                  driven.scan, key_needed, drv_rel.n,
+                                  cfg.cost_params, self.card_all[si])
+            chosen = cfg.force_plan or decision.plan
+            if driven.scan is None:
+                chosen = "S"
+            stats.plan_log.append(chosen)
+            if chosen == "N":
+                stats.plan_n += 1
+                dvn_rel = eng._driven_nplan(driven, plan, intervals,
+                                            explicit, key_needed, stats)
+            else:
+                stats.plan_s += 1
+                dvn_rel = eng._driven_splan(driven, plan, intervals,
+                                            explicit, stats)
+            if dvn_rel.n:
+                self._phase3(drv_rel, uniq_ents, boxes, dvn_rel,
+                             batcher=batcher)
+
+    def _phase3(self, drv_rel, uniq_ents, boxes, dvn_rel,
+                batcher=None) -> None:
+        """Phase-3 spatial join + refinement of one driven relation."""
+        eng = self.engine
+        cfg, plan = eng.config, self.plan
         driver, driven = self.driver, self.driven
         topk, stats = self.topk, self.stats
-        if cfg.use_sip and len(v_star) == 0:
-            return  # nothing on the driven side can join this block
-        stats.v_star_sizes.append(len(v_star))
-        intervals, explicit = tree.filter_material(v_star)
-
-        # ---- APS plan decision --------------------------------------
-        key_needed = (topk.theta
-                      - (self._driver_primary_best + self.driver_other)
-                      - eng._side_bound(driven, plan.descending, True)) \
-            if topk.full else -np.inf
-        decision = aps.choose(tree, v_star, plan.driven_cs, driven.scan,
-                              key_needed, drv_rel.n, cfg.cost_params,
-                              self.card_all)
-        chosen = cfg.force_plan or decision.plan
-        if driven.scan is None:
-            chosen = "S"
-        stats.plan_log.append(chosen)
-        if chosen == "N":
-            stats.plan_n += 1
-            dvn_rel = eng._driven_nplan(driven, plan, intervals, explicit,
-                                        key_needed, stats)
-        else:
-            stats.plan_s += 1
-            dvn_rel = eng._driven_splan(driven, plan, intervals, explicit,
-                                        stats)
-        if dvn_rel.n == 0:
-            return
-
-        # ---- Phase 3: spatial join + refinement ----------------------
         dvn_ents = np.unique(dvn_rel[driven.entity_var])
         dvn_boxes = eng.store.spatial_box_of(dvn_ents)
         ok = ~np.isnan(dvn_boxes[:, 0])
@@ -653,7 +681,8 @@ class QueryCursor:
             self._vstars.clear()
             self._sip_prefetch(b)
         drv_rel, uniq_ents, boxes = self.pending.pop(b)
-        v_star = self._vstars.pop(b, np.array([0], dtype=np.int64))
+        v_star = self._vstars.pop(
+            b, [np.array([0], dtype=np.int64)] * len(self.shards))
         self.b += 1
         if drv_rel.n and uniq_ents is not None and len(uniq_ents):
             self._process(drv_rel, uniq_ents, boxes, v_star)
@@ -669,12 +698,14 @@ class QueryCursor:
 
             {"boxes": [(M_i, 4) driver MBRs, ...], "driven_cs": (C,) int64,
              "prepared": PreparedKeys, "dist_norm": float,
-             "card_all": (N,) float64, "need_sip": bool,
-             "cs_path": (N,) bool | None}
+             "card_all": [(N_s,) float64 per shard], "need_sip": bool,
+             "cs_path": [(N_s,) bool per shard] | None}
 
-        ``cs_path`` is this query's precomputed root-path Bloom mask (set on
-        fused-descent routes, None on the host frontier) — the server passes
-        it through so pooled descents skip the per-step Bloom probes.
+        ``card_all``/``cs_path`` carry one entry per shard view (a 1-list
+        on unsharded stores). ``cs_path`` is this query's precomputed
+        root-path Bloom mask (set on fused-descent routes, None on the host
+        frontier) — the server passes it through so pooled descents skip
+        the per-step Bloom probes.
 
         ``boxes`` covers this block plus the cursor's `sip_lookahead`
         speculative window (one row per block), so each tenant keeps the
@@ -733,7 +764,8 @@ class QueryCursor:
             for w, v in zip(self._win_blocks, v_stars):
                 self._vstars[w] = v
             self._win_blocks = []
-        v_star = self._vstars.pop(b, np.array([0], dtype=np.int64))
+        v_star = self._vstars.pop(
+            b, [np.array([0], dtype=np.int64)] * len(self.shards))
         self._process(drv_rel, uniq_ents, boxes, v_star, batcher=batcher)
         if self.b >= self.n_blocks:
             self._finish()

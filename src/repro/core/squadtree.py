@@ -60,6 +60,143 @@ def csr_gather(starts: np.ndarray, cnt: np.ndarray) -> np.ndarray:
     return base + np.arange(total)
 
 
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """Vectorized bit_length for non-negative int64 (branchless clz)."""
+    g = x.astype(np.uint64)
+    out = np.zeros(len(g), dtype=np.int64)
+    for s in (32, 16, 8, 4, 2, 1):
+        m = (g >> np.uint64(s)) != 0
+        out[m] += s
+        g[m] >>= np.uint64(s)
+    return out + (g != 0)
+
+
+@dataclasses.dataclass
+class PackedEList:
+    """Compressed E-list tier: k²-triples-style bit-packed adjacency.
+
+    Each nonempty node's sorted id list is stored as a 64-bit base plus
+    gap-encoded deltas, bit-packed at the node's own width (the bit length
+    of its largest gap) into one shared uint64 word stream. When the
+    tree's sorted `obj_ids` array is supplied at encode time, lists are
+    first mapped to their RANKS in that array and the ranks are what gets
+    gap-packed (`src` set): every E-list id is an object of the same tree,
+    so the rank view is lossless, and rank gaps are positional distances
+    bounded by ``bit_length(n_objects)`` bits — leaf lists that mix id
+    levels (50+-bit raw-id gaps) shrink to a few bits per entry. Decoding
+    is a vectorized word/shift extraction plus a segmented cumsum, then a
+    gather through `src` in rank mode, done per node on the gather path
+    (`SQuadTree.elist` / `filter_material`); `elist_size` stays on the raw
+    CSR offsets so size-only consumers never touch this tier.
+    """
+    nodes: np.ndarray     # (K,) int32 sorted node indices w/ nonempty lists
+    counts: np.ndarray    # (K,) int32 list length per node
+    base: np.ndarray      # (K,) int64 first id (or rank, if `src`) per list
+    width: np.ndarray     # (K,) uint8 bits per packed gap (1..63)
+    bit_off: np.ndarray   # (K,) int64 start bit of each node's gap stream
+    words: np.ndarray     # (W,) uint64 packed gaps (+ stitch padding)
+    src: np.ndarray | None = None  # shared sorted obj_ids (not owned):
+    #                                when set, packed values are ranks into it
+
+    @classmethod
+    def encode(cls, offsets: np.ndarray, ids_flat: np.ndarray,
+               obj_ids: np.ndarray | None = None) -> "PackedEList":
+        counts_all = np.diff(offsets)
+        nodes = np.flatnonzero(counts_all).astype(np.int32)
+        counts = counts_all[nodes.astype(np.int64)].astype(np.int32)
+        k = len(nodes)
+        if k == 0:
+            return cls(nodes, counts, np.empty(0, np.int64),
+                       np.empty(0, np.uint8), np.empty(0, np.int64),
+                       np.zeros(1, np.uint64))
+        starts = offsets[nodes]
+        src = None
+        vals = ids_flat
+        if obj_ids is not None and len(obj_ids):
+            r = np.searchsorted(obj_ids, ids_flat)
+            r[r >= len(obj_ids)] = 0
+            if np.array_equal(obj_ids[r], ids_flat):
+                src, vals = obj_ids, r.astype(np.int64)
+        base = vals[starts].astype(np.int64)
+        # gaps between consecutive values; each list's first slot is floored
+        # to 1 so it can share the per-node max without dominating it (real
+        # gaps are >= 1: lists are sorted unique, ranks strictly increase)
+        d = np.empty(len(vals), dtype=np.int64)
+        d[0] = 1
+        d[1:] = vals[1:] - vals[:-1]
+        d[starts] = 1
+        width = _bit_length(np.maximum.reduceat(d, starts))
+        # spatial ids all carry the S bit, so gaps fit well under 2^62
+        assert int(width.max()) <= 63, "E-list gap exceeds 63 bits"
+        n_gaps = counts - 1
+        bits = width * n_gaps
+        bit_off = np.concatenate([[0], np.cumsum(bits)[:-1]]).astype(np.int64)
+        words = np.zeros(int(bits.sum()) // 64 + 2, dtype=np.uint64)
+        total_g = int(n_gaps.sum())
+        if total_g:
+            seg = np.repeat(np.arange(k), n_gaps)
+            pos = csr_gather(starts + 1, n_gaps)
+            local = pos - starts[seg] - 1
+            p = bit_off[seg] + local * width[seg]
+            w = p >> 6
+            sh = (p & 63).astype(np.uint64)
+            val = d[pos].astype(np.uint64)
+            np.bitwise_or.at(words, w, val << sh)
+            rs = (np.uint64(64) - sh) & np.uint64(63)
+            hi = np.where(sh != 0, val >> rs, np.uint64(0))
+            np.bitwise_or.at(words, w + 1, hi)
+        return cls(nodes, counts, base, width.astype(np.uint8),
+                   bit_off, words, src=src)
+
+    def decode(self, ranks: np.ndarray) -> np.ndarray:
+        """Concatenated decoded id lists for node *ranks* (indices into
+        `nodes`), each list in its original sorted order."""
+        ranks = np.asarray(ranks, dtype=np.int64)
+        cnt = self.counts[ranks].astype(np.int64)
+        total = int(cnt.sum())
+        out = np.empty(total, dtype=np.int64)
+        if total == 0:
+            return out
+        first = np.concatenate([[0], np.cumsum(cnt)[:-1]]).astype(np.int64)
+        out[first] = self.base[ranks]
+        n_g = cnt - 1
+        total_g = int(n_g.sum())
+        if total_g:
+            seg = np.repeat(np.arange(len(ranks)), n_g)
+            local = (np.arange(total_g)
+                     - np.repeat(np.cumsum(n_g) - n_g, n_g))
+            r = ranks[seg]
+            wdt = self.width[r].astype(np.int64)
+            p = self.bit_off[r] + local * wdt
+            w = p >> 6
+            sh = (p & 63).astype(np.uint64)
+            rs = (np.uint64(64) - sh) & np.uint64(63)
+            v = (self.words[w] >> sh) | np.where(
+                sh != 0, self.words[w + 1] << rs, np.uint64(0))
+            mask = (np.uint64(1) << wdt.astype(np.uint64)) - np.uint64(1)
+            out[np.repeat(first, n_g) + 1 + local] = (v & mask).astype(
+                np.int64)
+        cs = np.cumsum(out)
+        out = cs - np.repeat(cs[first] - out[first], cnt)
+        return self.src[out] if self.src is not None else out
+
+    def ranks_of(self, node_idx: np.ndarray) -> np.ndarray:
+        """Ranks of the given node indices that have nonempty lists."""
+        node_idx = np.asarray(node_idx, dtype=np.int64)
+        if not len(self.nodes):
+            return np.empty(0, dtype=np.int64)
+        r = np.searchsorted(self.nodes, node_idx)
+        r_c = np.minimum(r, len(self.nodes) - 1)
+        return r_c[(self.nodes[r_c] == node_idx) & (r < len(self.nodes))]
+
+    def nbytes(self) -> int:
+        # `src` is the tree's own obj_ids array, shared not owned — it is
+        # already accounted for in `SQuadTree.nbytes`.
+        return (self.nodes.nbytes + self.counts.nbytes + self.base.nbytes
+                + self.width.nbytes + self.bit_off.nbytes
+                + self.words.nbytes)
+
+
 def _pad_box_sets(box_sets) -> np.ndarray:
     """Stack ragged per-block box sets into (B, M_max, 4) with NaN padding.
 
@@ -101,6 +238,8 @@ class SQuadTree:
     obj_mbr: np.ndarray         # (M, 4) float64 normalized
     obj_entity: np.ndarray      # (M,) int64 original entity key
     entity_to_id: dict          # entity key -> spatial id
+    # --- optional compressed E-list tier (replaces elist_ids when set) ---
+    packed: PackedEList | None = None
     # --- derived level buckets (computed in __post_init__) ---
     # Nodes are laid out parents-before-children but levels interleave (DFS
     # build order); the CSR below buckets node indices by level so the
@@ -136,8 +275,22 @@ class SQuadTree:
         return len(self.obj_ids)
 
     def elist(self, node: int) -> np.ndarray:
+        if self.packed is not None:
+            ranks = self.packed.ranks_of(np.array([node], dtype=np.int64))
+            return (self.packed.decode(ranks) if len(ranks)
+                    else np.empty(0, dtype=np.int64))
         a, b = self.elist_offsets[node], self.elist_offsets[node + 1]
         return self.elist_ids[a:b]
+
+    def pack_elists(self) -> "SQuadTree":
+        """Switch to the compressed `PackedEList` tier in place (and drop
+        the raw id array). Accessors decode per node on the gather path;
+        `elist_size` stays on the CSR offsets either way."""
+        if self.packed is None and len(self.elist_ids):
+            self.packed = PackedEList.encode(self.elist_offsets,
+                                             self.elist_ids, self.obj_ids)
+            self.elist_ids = np.empty(0, dtype=np.int64)
+        return self
 
     def elist_size(self, node) -> np.ndarray:
         node = np.asarray(node)
@@ -159,6 +312,8 @@ class SQuadTree:
             total += arr.nbytes
         total += self.bloom_self.nbytes() + self.bloom_in.nbytes()
         total += self.bloom_out.nbytes() + self.cs_stats.nbytes()
+        if self.packed is not None:
+            total += self.packed.nbytes()
         return total
 
     # ------------------------------------------------------------------
@@ -433,7 +588,11 @@ class SQuadTree:
         cnt = self.elist_offsets[v_star + 1] - starts
         if cnt.sum() == 0:
             return intervals, np.empty(0, dtype=np.int64)
-        explicit = np.unique(self.elist_ids[csr_gather(starts, cnt)])
+        if self.packed is not None:
+            explicit = np.unique(
+                self.packed.decode(self.packed.ranks_of(v_star)))
+        else:
+            explicit = np.unique(self.elist_ids[csr_gather(starts, cnt)])
         return intervals, explicit
 
 
@@ -484,11 +643,21 @@ def build(entity_keys: np.ndarray,
           l_max: int = ids.L_MAX,
           leaf_capacity: int = 64,
           bloom_words: int = 8,
-          bloom_k: int = 3) -> SQuadTree:
+          bloom_k: int = 3,
+          oids: np.ndarray | None = None,
+          boxes_normalized: bool = False,
+          compressed: bool = False) -> SQuadTree:
     """Build the S-QuadTree over spatial entities.
 
     cs_in / cs_out are CSR pairs ``(offsets, cs_ids)`` aligned to
     ``entity_keys`` giving incoming/outgoing characteristic sets per entity.
+
+    ``oids`` supplies precomputed spatial ids aligned to ``entity_keys``
+    (with ``boxes_normalized=True`` and an explicit ``extent``): the shard
+    builder uses this to keep GLOBAL ids in shard-local trees — re-running
+    `_assign_ids` over a shard's subset would restart the per-(zpath, level)
+    local counters and diverge from the single-host assignment.
+    ``compressed`` packs the E-list tier (`pack_elists`) before returning.
     """
     assert l_max <= ids.L_MAX
     entity_keys = np.asarray(entity_keys, dtype=np.int64)
@@ -496,10 +665,15 @@ def build(entity_keys: np.ndarray,
     cs_self = np.asarray(cs_self, dtype=np.int64)
     m = len(entity_keys)
     if extent is None:
+        assert not boxes_normalized, "normalized boxes need an explicit extent"
         extent = Extent.of(boxes_world)
-    boxes = extent.normalize(boxes_world)
+    boxes = boxes_world if boxes_normalized else extent.normalize(boxes_world)
 
-    oid, zpath, level = _assign_ids(boxes, l_max)
+    if oids is None:
+        oid, zpath, level = _assign_ids(boxes, l_max)
+    else:
+        oid = np.asarray(oids, dtype=np.int64)
+        _, zpath, level, _ = ids.decode(oid)
     order = np.argsort(oid, kind="stable")
     oid, zpath, level = oid[order], zpath[order], level[order]
     boxes, entity_keys, cs_self = boxes[order], entity_keys[order], cs_self[order]
@@ -629,7 +803,7 @@ def build(entity_keys: np.ndarray,
         np.concatenate(stat_nodes) if stat_nodes else np.empty(0, np.int64),
         np.concatenate(stat_cs) if stat_cs else np.empty(0, np.int64), n)
 
-    return SQuadTree(
+    tree = SQuadTree(
         extent=extent, l_max=l_max,
         node_z=node_z, node_level=node_level, node_parent=node_parent,
         node_children=node_children, node_cell=node_cell, node_mbr=node_mbr,
@@ -640,6 +814,7 @@ def build(entity_keys: np.ndarray,
         obj_ids=oid, obj_mbr=boxes, obj_entity=entity_keys,
         entity_to_id=inv,
     )
+    return tree.pack_elists() if compressed else tree
 
 
 # ----------------------------------------------------------------------------

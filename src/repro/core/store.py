@@ -14,7 +14,7 @@ import numpy as np
 
 from . import charsets, geometry
 from .dictionary import Dictionary
-from .squadtree import SQuadTree, build as build_tree
+from .squadtree import SQuadTree, build as build_tree, csr_gather
 
 # column order names -> tuple of column indices into (g, s, p, o)
 G, S, P, O = 0, 1, 2, 3
@@ -108,6 +108,78 @@ class DirectedNumericScan:
         return count
 
 
+def _sorted_lut(d: dict) -> tuple[np.ndarray, np.ndarray]:
+    """dict -> (sorted int64 keys, aligned int64 values) for vector lookup."""
+    if not d:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    keys = np.fromiter(d.keys(), np.int64, len(d))
+    vals = np.fromiter(d.values(), np.int64, len(d))
+    order = np.argsort(keys)
+    return keys[order], vals[order]
+
+
+def lut_get(keys: np.ndarray, vals: np.ndarray, col: np.ndarray,
+            default: int = 0) -> np.ndarray:
+    """Vectorized ``{k: v}.get(x, default)`` over a sorted-key LUT."""
+    col = np.asarray(col, dtype=np.int64)
+    out = np.full(len(col), default, dtype=np.int64)
+    if len(keys):
+        pos = np.clip(np.searchsorted(keys, col), 0, len(keys) - 1)
+        hit = keys[pos] == col
+        out[hit] = vals[pos[hit]]
+    return out
+
+
+def _segmented_unique_csr(seg: np.ndarray, vals: np.ndarray, n_seg: int
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-segment sorted-unique values -> CSR ``(offsets, values)``.
+
+    Matches ``[np.unique(vals[seg == i]) for i in range(n_seg)]`` exactly
+    (sorted unique per segment, concatenated) without the python loop.
+    """
+    if len(seg) == 0:
+        return np.zeros(n_seg + 1, dtype=np.int64), np.empty(0, np.int64)
+    order = np.lexsort((vals, seg))
+    s_s, v_s = seg[order], vals[order]
+    keep = np.empty(len(s_s), dtype=bool)
+    keep[0] = True
+    keep[1:] = (s_s[1:] != s_s[:-1]) | (v_s[1:] != v_s[:-1])
+    s_u, v_u = s_s[keep], v_s[keep]
+    off = np.zeros(n_seg + 1, dtype=np.int64)
+    np.add.at(off, s_u + 1, 1)
+    return np.cumsum(off), v_u
+
+
+def _entity_cs_csr(quads: np.ndarray, ent: np.ndarray,
+                   cs_keys: np.ndarray, cs_vals: np.ndarray
+                   ) -> tuple[tuple[np.ndarray, np.ndarray],
+                              tuple[np.ndarray, np.ndarray]]:
+    """Per-entity incoming/outgoing characteristic-set CSRs.
+
+    incoming(e) = unique CS of subjects s with a quad (s, p, e);
+    outgoing(e) = unique CS of objects o of quads (e, p, o). One sort per
+    direction + a segmented unique — the vectorized twin of the original
+    per-entity loop (identical CSRs), shared by `build_store` and the
+    shard builder (`core/shard.py`), where `ent` holds spatial ids against
+    the remapped quads (the remap is bijective, so the sets agree with
+    build time).
+    """
+    ent = np.asarray(ent, dtype=np.int64)
+
+    def one(col_sort: int, col_take: int):
+        order = np.argsort(quads[:, col_sort], kind="stable")
+        sorted_col = quads[order, col_sort]
+        lo = np.searchsorted(sorted_col, ent, "left")
+        hi = np.searchsorted(sorted_col, ent, "right")
+        cnt = hi - lo
+        rows = order[csr_gather(lo, cnt)]
+        seg = np.repeat(np.arange(len(ent), dtype=np.int64), cnt)
+        cs = lut_get(cs_keys, cs_vals, quads[rows, col_take])
+        return _segmented_unique_csr(seg, cs, len(ent))
+
+    return one(O, S), one(S, O)
+
+
 def _build_numeric_index(values, subjects, objects, facts, block: int
                          ) -> NumericIndex:
     order = np.argsort(-values, kind="stable")
@@ -198,19 +270,36 @@ class GeomPool:
 
 def _build_geom_pool(tree: SQuadTree | None, exact_geoms: dict) -> GeomPool:
     """Per-entity geometries in tree.obj_ids order, MBR-corner fallback."""
+    if tree is None:
+        return GeomPool.from_lists([])
+    ext = tree.extent
+    if not exact_geoms:
+        # all-MBR fast path (the synthetic scaling datasets): two corner
+        # points per entity, built dense — bit-identical to the loop (f64
+        # denormalize, then the f32 cast `from_lists` would apply)
+        m = len(tree.obj_ids)
+        b = tree.obj_mbr
+        pts = np.empty((2 * m + 1, 2), dtype=np.float32)
+        pts[0:2 * m:2, 0] = b[:, 0] * ext.width + ext.xmin
+        pts[0:2 * m:2, 1] = b[:, 1] * ext.height + ext.ymin
+        pts[1:2 * m:2, 0] = b[:, 2] * ext.width + ext.xmin
+        pts[1:2 * m:2, 1] = b[:, 3] * ext.height + ext.ymin
+        pts[2 * m] = 0.0                                    # sentinel
+        offsets = np.empty(m + 2, dtype=np.int64)
+        offsets[:m + 1] = np.arange(m + 1, dtype=np.int64) * 2
+        offsets[m + 1] = 2 * m + 1
+        return GeomPool(pts, offsets)
     pts_list = []
-    if tree is not None:
-        ext = tree.extent
-        for pos in range(len(tree.obj_ids)):
-            e = int(tree.obj_ids[pos])
-            g = exact_geoms.get(e)
-            if g is None:
-                b = tree.obj_mbr[pos]
-                g = np.array([
-                    [b[0] * ext.width + ext.xmin, b[1] * ext.height + ext.ymin],
-                    [b[2] * ext.width + ext.xmin, b[3] * ext.height + ext.ymin],
-                ])
-            pts_list.append(g)
+    for pos in range(len(tree.obj_ids)):
+        e = int(tree.obj_ids[pos])
+        g = exact_geoms.get(e)
+        if g is None:
+            bx = tree.obj_mbr[pos]
+            g = np.array([
+                [bx[0] * ext.width + ext.xmin, bx[1] * ext.height + ext.ymin],
+                [bx[2] * ext.width + ext.xmin, bx[3] * ext.height + ext.ymin],
+            ])
+        pts_list.append(g)
     return GeomPool.from_lists(pts_list)
 
 
@@ -356,7 +445,7 @@ def build_store(quads: np.ndarray,
     quads = np.asarray(quads, dtype=np.int64)
 
     # --- characteristic sets over all subjects --------------------------
-    subj, pred, obj = quads[:, S], quads[:, P], quads[:, O]
+    subj, pred = quads[:, S], quads[:, P]
     uniq_s, cs_ids = charsets.compute_characteristic_sets(subj, pred)
     cs_of = dict(zip(uniq_s.tolist(), cs_ids.tolist()))
     catalog = charsets.cs_catalog(subj, pred)
@@ -367,30 +456,14 @@ def build_store(quads: np.ndarray,
     if geometries:
         ent = np.array(sorted(geometries.keys()), dtype=np.int64)
         boxes = np.array([geometries[int(e)] for e in ent], dtype=np.float64)
-        cs_self = np.array([cs_of.get(int(e), 0) for e in ent], dtype=np.int64)
-        # incoming CS: subjects s with (s, p, e); outgoing CS: objects o of (e, p, o)
-        in_lists, out_lists = [], []
-        obj_sorted_rows = quads[np.argsort(obj, kind="stable")]
-        subj_sorted_rows = quads[np.argsort(subj, kind="stable")]
-        os_col = obj_sorted_rows[:, O]
-        ss_col = subj_sorted_rows[:, S]
-        for e in ent:
-            a, b = np.searchsorted(os_col, e), np.searchsorted(os_col, e, "right")
-            incoming_subjects = obj_sorted_rows[a:b, S]
-            in_lists.append(np.unique(np.array(
-                [cs_of.get(int(x), 0) for x in incoming_subjects], dtype=np.int64)))
-            a, b = np.searchsorted(ss_col, e), np.searchsorted(ss_col, e, "right")
-            out_objects = subj_sorted_rows[a:b, O]
-            out_lists.append(np.unique(np.array(
-                [cs_of.get(int(x), 0) for x in out_objects], dtype=np.int64)))
-        def to_csr(lists):
-            off = np.zeros(len(lists) + 1, dtype=np.int64)
-            off[1:] = np.cumsum([len(x) for x in lists])
-            vals = (np.concatenate(lists) if len(lists) and off[-1]
-                    else np.empty(0, dtype=np.int64))
-            return off, vals
+        cs_keys, cs_vals = _sorted_lut(cs_of)
+        cs_self = lut_get(cs_keys, cs_vals, ent)
+        # incoming CS: subjects s with (s, p, e); outgoing CS: objects o of
+        # (e, p, o) — one sort per direction + segmented unique (identical
+        # to the original per-entity loop, scale-viable at 10M+ triples)
+        cs_in, cs_out = _entity_cs_csr(quads, ent, cs_keys, cs_vals)
         tree = build_tree(ent, boxes, cs_self,
-                          cs_in=to_csr(in_lists), cs_out=to_csr(out_lists),
+                          cs_in=cs_in, cs_out=cs_out,
                           l_max=l_max, leaf_capacity=leaf_capacity,
                           extent=extent)
         mapping = dict(tree.entity_to_id)
@@ -434,12 +507,14 @@ def build_store(quads: np.ndarray,
         num_vals_sorted = np.fromiter(numeric_ids.values(), np.float64)[order_n]
         is_num = np.isin(quads[:, O], num_ids_sorted)
         nq = quads[is_num]
+        # value lookup through the dense LUT (same floats as the dict)
+        nv = num_vals_sorted[np.searchsorted(num_ids_sorted, nq[:, O])]
         for p_id in np.unique(nq[:, P]):
-            rows = nq[nq[:, P] == p_id]
-            vals = np.array([numeric_ids[int(x)] for x in rows[:, O]])
+            sel = nq[:, P] == p_id
+            rows = nq[sel]
             numeric[int(p_id)] = _build_numeric_index(
-                vals, rows[:, S].copy(), rows[:, O].copy(), rows[:, G].copy(),
-                block)
+                nv[sel], rows[:, S].copy(), rows[:, O].copy(),
+                rows[:, G].copy(), block)
 
     # remap exact geometries to spatial ids, pack them into the CSR pool
     ex = {}

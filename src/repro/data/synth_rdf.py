@@ -184,6 +184,122 @@ def make_lgd(n_per_class: int = 400, seed: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# Bulk scaling generator (1M -> 100M quads)
+# ---------------------------------------------------------------------------
+
+def make_scale(n_quads: int, seed: int = 0,
+               l_max: int = 8, leaf_capacity: int = 256,
+               block: int = 4096, n_conf_bins: int = 4096) -> SynthDataset:
+    """LGD-shaped dataset built with bulk numpy ops, viable at 10M-100M quads.
+
+    The per-entity Python loops of `make_lgd`/`make_yago` cap out around
+    ~1M quads; this generator constructs the quad table, geometry boxes and
+    numeric literals as whole arrays (only the handful of predicate/class
+    terms and the `n_conf_bins` quantized confidence literals go through
+    the dictionary), keeping the paper's evaluated shape: two localized
+    spatial classes, reified type facts ranked by exponential confidence,
+    attribute quads for CS variety, and the LGD pair query (SS + RS joins,
+    spatial filter, ORDER BY ASC(conf+conf1) LIMIT k).
+
+    Entities carry box MBRs (not points), so quadrant-line straddlers give
+    the interior nodes populated E-lists — the regime the compressed
+    `PackedEList` tier targets.
+
+    ~4.5 quads per entity: geometry + reified type + confidence per
+    entity, attr1 for all, attr2 for every other entity.
+    """
+    rng = np.random.default_rng(seed)
+    d = Dictionary.empty()
+    ns = {k: d.intern(k) for k in (
+        "rdf:type", "hasGeometry", "hasConfidence", "attr1", "attr2",
+        "class:poi", "class:site")}
+    # quantized confidence literals (bounded distinct count: the dictionary
+    # round-trip stays O(n_conf_bins), not O(n_quads))
+    grid = np.round(np.linspace(0.0, 1.0, n_conf_bins), 6)
+    conf_ids = np.array([d.intern_numeric(float(v)) for v in grid],
+                        dtype=np.int64)
+
+    n_ent = max(int(n_quads / 4.5), 2)
+    extent = 100.0
+    # plain-id ranges (disjoint, far below the S bit)
+    e0 = 1 << 20                       # entities
+    f0 = e0 + n_ent                    # reified type-fact ids
+    g0 = f0 + n_ent                    # geometry objects
+    a0 = g0 + n_ent                    # attribute object pool
+    n_pool = 1 << 16
+    d._next = a0 + n_pool
+
+    ent = e0 + np.arange(n_ent, dtype=np.int64)
+    fact = f0 + np.arange(n_ent, dtype=np.int64)
+    geo = g0 + np.arange(n_ent, dtype=np.int64)
+
+    # two localized classes: poi in [0, 62], site in [48, 100] — the narrow
+    # overlap keeps the pair query spatially selective (Fig. 7 regime)
+    is_site = np.arange(n_ent) % 2 == 1
+    cls = np.where(is_site, ns["class:site"], ns["class:poi"])
+    n_cl = 64
+    lo = np.where(is_site, 48.0, 0.0)
+    hi = np.where(is_site, 100.0, 62.0)
+    centers = rng.uniform(0.0, 1.0, size=(n_cl, 2))
+    which = rng.integers(0, n_cl, size=n_ent)
+    pts = centers[which] * (hi - lo)[:, None] + lo[:, None] \
+        + rng.normal(0, extent * 0.02, size=(n_ent, 2))
+    pts = np.clip(pts, 0.0, extent)
+    half = rng.lognormal(np.log(extent * 0.002), 0.6, size=(n_ent, 2))
+    boxes = np.concatenate([np.clip(pts - half, 0, extent),
+                            np.clip(pts + half, 0, extent)], axis=1)
+
+    conf_bin = np.minimum((rng.exponential(0.3, size=n_ent) *
+                           (n_conf_bins - 1)).astype(np.int64),
+                          n_conf_bins - 1)
+    conf_obj = conf_ids[conf_bin]
+    attr1_obj = a0 + rng.integers(0, n_pool, size=n_ent)
+    has_a2 = np.arange(n_ent) % 2 == 0
+    attr2_obj = a0 + rng.integers(0, n_pool, size=int(has_a2.sum()))
+
+    zeros = np.zeros(n_ent, dtype=np.int64)
+    quads = np.concatenate([
+        np.stack([zeros, ent, np.full(n_ent, ns["hasGeometry"]), geo], 1),
+        np.stack([fact, ent, np.full(n_ent, ns["rdf:type"]), cls], 1),
+        np.stack([zeros, fact, np.full(n_ent, ns["hasConfidence"]),
+                  conf_obj], 1),
+        np.stack([zeros, ent, np.full(n_ent, ns["attr1"]), attr1_obj], 1),
+        np.stack([zeros[has_a2], ent[has_a2],
+                  np.full(int(has_a2.sum()), ns["attr2"]),
+                  attr2_obj], 1),
+    ]).astype(np.int64)
+
+    geometries = dict(zip(ent.tolist(), boxes))
+    store = build_store(quads, d, geometry_predicate=ns["hasGeometry"],
+                        geometries=geometries, exact_geoms=None,
+                        l_max=l_max, leaf_capacity=leaf_capacity,
+                        block=block)
+    ns = {k: store.dictionary.term_to_id[k] for k in ns}
+
+    def pair_query(cls_a: str, cls_b: str, dist: float, k: int = 100) -> Query:
+        pa, pb = Var("place"), Var("nplace")
+        patterns = (
+            TriplePattern(pa, Var("typePred1"), ns[cls_a], g=Var("r")),
+            TriplePattern(Var("r"), ns["hasConfidence"], Var("conf")),
+            TriplePattern(pa, ns["hasGeometry"], Var("g1")),
+            TriplePattern(pb, Var("typePred2"), ns[cls_b], g=Var("r1")),
+            TriplePattern(Var("r1"), ns["hasConfidence"], Var("conf1")),
+            TriplePattern(pb, ns["hasGeometry"], Var("g2")),
+        )
+        return Query(
+            select=(pa, pb), patterns=patterns,
+            spatial=SpatialFilter(Var("g1"), Var("g2"), dist),
+            ranking=Ranking(((Var("conf"), 1.0), (Var("conf1"), 1.0)),
+                            descending=False), k=k)
+
+    queries = [
+        pair_query("class:poi", "class:site", extent * 0.005),
+        pair_query("class:site", "class:poi", extent * 0.002),
+    ]
+    return SynthDataset("scale", store, ns, queries, quads.nbytes)
+
+
+# ---------------------------------------------------------------------------
 # YAGO3-like
 # ---------------------------------------------------------------------------
 

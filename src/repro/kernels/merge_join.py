@@ -26,12 +26,13 @@ sentinel planes, which compare strictly greater than any real probe
 is O(M·N) compares versus O(M·log N) for the binary search, but it is all
 8x128 VPU compares with zero control flow.
 
-The table axis is tiled through the grid: each probe block's rank pair is
-an accumulator revisited across the table-tile axis (zeroed on the first
-tile via `pl.when`), so only one (bb-probe, tn-table) tile pair is VMEM
-resident at a time and relations past VMEM stream through on-chip instead
-of falling back. Tables that fit a single tile keep the old one-shot
-schedule (the tile clamps to the padded table size).
+The table axis is tiled INSIDE the kernel: the table planes stay in HBM
+(`memory_space=ANY`) and stream through a two-slot VMEM scratch with
+explicit async copies — tile j+1's DMA is issued before tile j's compare
+pass runs, so for tables past VMEM the HBM stream overlaps the VPU
+counting loop instead of serializing with it (double buffering). Each grid
+step is one probe block; its rank pair accumulates in registers across the
+tile loop. Tables that fit a single tile degenerate to one warm-up copy.
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # planes of the int64-max padding sentinel: hi = 0x7FFFFFFF and
 # lo = 0xFFFFFFFF ^ sign-bit-flip = 0x7FFFFFFF
@@ -54,18 +56,50 @@ def _plane_lt_le(t_hi, t_lo, p_hi, p_lo):
     return lt, le
 
 
-def _kernel(t_hi_ref, t_lo_ref, p_hi_ref, p_lo_ref, lo_ref, hi_ref):
-    # the (bb, 1) rank pair is an accumulator revisited across the
-    # table-tile axis (out index map ignores program_id(1))
-    @pl.when(pl.program_id(1) == 0)
-    def _init():
-        lo_ref[...] = jnp.zeros_like(lo_ref)
-        hi_ref[...] = jnp.zeros_like(hi_ref)
+def _kernel(n_tiles: int, tn: int,
+            t_ref, p_hi_ref, p_lo_ref, lo_ref, hi_ref):
+    """One probe block against the whole table.
 
-    lt, le = _plane_lt_le(t_hi_ref[...], t_lo_ref[...],   # (1, tn)
-                          p_hi_ref[...], p_lo_ref[...])   # (bb, 1)
-    lo_ref[...] += jnp.sum(lt.astype(jnp.int32), axis=1, keepdims=True)
-    hi_ref[...] += jnp.sum(le.astype(jnp.int32), axis=1, keepdims=True)
+    `t_ref` is the stacked (2, n_pad) hi/lo plane array left in HBM; tiles
+    stream through a (2 slots, 2 planes, tn) VMEM scratch. The next tile's
+    copy is started BEFORE waiting on the current one, so tile j+1's HBM
+    read overlaps tile j's O(bb·tn) compare-and-sum.
+    """
+    p_hi = p_hi_ref[...]                                   # (bb, 1)
+    p_lo = p_lo_ref[...]
+
+    def scoped(scratch, sem):
+        def copy_in(slot, j):
+            return pltpu.make_async_copy(
+                t_ref.at[:, pl.ds(j * tn, tn)], scratch.at[slot],
+                sem.at[slot])
+
+        copy_in(0, 0).start()                              # warm-up
+
+        def body(j, carry):
+            lo_acc, hi_acc = carry
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j + 1 < n_tiles)
+            def _prefetch():
+                copy_in(jax.lax.rem(j + 1, 2), j + 1).start()
+
+            copy_in(slot, j).wait()
+            blk = scratch[slot]                            # (2, tn)
+            lt, le = _plane_lt_le(blk[0:1, :], blk[1:2, :], p_hi, p_lo)
+            return (lo_acc + jnp.sum(lt.astype(jnp.int32), axis=1,
+                                     keepdims=True),
+                    hi_acc + jnp.sum(le.astype(jnp.int32), axis=1,
+                                     keepdims=True))
+
+        z = jnp.zeros(lo_ref.shape, jnp.int32)
+        lo, hi = jax.lax.fori_loop(0, n_tiles, body, (z, z))
+        lo_ref[...] = lo
+        hi_ref[...] = hi
+
+    pl.run_scoped(scoped,
+                  scratch=pltpu.VMEM((2, 2, tn), jnp.int32),
+                  sem=pltpu.SemaphoreType.DMA((2,)))
 
 
 @functools.partial(jax.jit, static_argnames=("bb", "tn", "interpret"))
@@ -93,22 +127,21 @@ def merge_join_ranks(t_hi: jnp.ndarray, t_lo: jnp.ndarray,
     t_lo = jnp.pad(t_lo, (0, n_pad - n), constant_values=_SENT)
     p_hi = jnp.pad(p_hi, (0, mp - m))
     p_lo = jnp.pad(p_lo, (0, mp - m))
+    t_planes = jnp.stack([t_hi, t_lo])                     # (2, n_pad)
     lo, hi = pl.pallas_call(
-        _kernel,
-        grid=(mp // bb, n_pad // tn),
+        functools.partial(_kernel, n_pad // tn, tn),
+        grid=(mp // bb,),
         in_specs=[
-            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
-            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
-            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),          # table: HBM
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
         ],
-        out_specs=[pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
-                   pl.BlockSpec((bb, 1), lambda i, j: (i, 0))],
+        out_specs=[pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bb, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((mp, 1), jnp.int32),
                    jax.ShapeDtypeStruct((mp, 1), jnp.int32)],
         interpret=interpret,
-    )(t_hi.reshape(1, -1), t_lo.reshape(1, -1),
-      p_hi.reshape(-1, 1), p_lo.reshape(-1, 1))
+    )(t_planes, p_hi.reshape(-1, 1), p_lo.reshape(-1, 1))
     return lo[:m, 0], hi[:m, 0]
 
 

@@ -353,6 +353,77 @@ def tree_descend(node_keys, cs_path, box_keys, backend: str = "kernel",
     return np.asarray(out[:b]) != 0
 
 
+def tree_descend_sharded(node_keys, cs_path, box_keys,
+                         backend: str = "kernel"):
+    """Phase-1 descent over every store shard in one dispatch.
+
+    node_keys (S, 4, N_max) stacked per-shard `f64_sort_keys` planes (pad
+    columns carry `DESCEND_PAD_BOX`); cs_path (S, N_max) bool with padded
+    nodes False; box_keys (B, M, 4) shared driver boxes. Returns (S, B,
+    N_max) bool masks.
+
+    The live route lays the shard axis over a `launch/mesh.make_shard_mesh`
+    mesh via shard_map — each device sweeps its resident shards with the
+    SAME per-shard descent `tree_descend` launches (Pallas kernel on TPU,
+    the jitted dense oracle on CPU), so device count scales shards without
+    touching the kernel. Failover: a sequential host loop of per-shard
+    `tree_descend` calls (each with its own internal chain). Both routes
+    are exact integer-compare passes — bit-identical.
+    """
+    if backend not in ("kernel", "interpret"):
+        raise ValueError(f"unknown tree-descend backend {backend!r}")
+    node_keys = np.asarray(node_keys, dtype=np.int64)
+    box_keys = np.asarray(box_keys, dtype=np.int64)
+    s, _, n = node_keys.shape
+    b, m = box_keys.shape[0], box_keys.shape[1]
+    if s == 0 or n == 0 or b == 0:
+        return np.zeros((s, b, n), dtype=bool)
+    bp = 1 << max(int(b - 1).bit_length(), 0)
+    mp = 1 << max(int(m - 1).bit_length(), 3)
+    padded = box_keys
+    if bp != b or mp != m:
+        padded = np.empty((bp, mp, 4), dtype=np.int64)
+        padded[:] = DESCEND_PAD_BOX
+        padded[:b, :m] = box_keys
+    cs = np.asarray(cs_path).astype(np.int32)
+
+    def via_shard_map():
+        from ..launch import mesh as _mesh
+        msh = _mesh.make_shard_mesh(s)
+        spec = jax.sharding.PartitionSpec
+        n_hi, n_lo = split_key_planes(node_keys)
+        b_hi, b_lo = split_key_planes(padded)
+        pallas = backend == "interpret" or _on_tpu()
+
+        def body(nh, nl, c, bh, bl):
+            def one(args):
+                nh1, nl1, c1 = args
+                if pallas:
+                    return _td.tree_descend(
+                        nh1, nl1, c1, bh, bl,
+                        interpret=backend == "interpret" and not _on_tpu())
+                return ref.tree_descend_ref(nh1, nl1, c1, bh, bl)
+            return jax.lax.map(one, (nh, nl, c))
+
+        f = _mesh.shard_map_compat(
+            body, msh,
+            in_specs=(spec("shard"), spec("shard"), spec("shard"),
+                      spec(), spec()),
+            out_specs=spec("shard"))
+        out = f(jnp.asarray(n_hi), jnp.asarray(n_lo), jnp.asarray(cs),
+                jnp.asarray(b_hi), jnp.asarray(b_lo))
+        return np.asarray(out)[:, :b]
+
+    def sequential():
+        return np.stack([
+            tree_descend(node_keys[i], cs[i], box_keys, backend=backend)
+            .astype(np.int32) for i in range(s)])
+
+    attempts = [("shard_map", via_shard_map), ("sequential", sequential)]
+    out = _fault.run_op("tree_descend_sharded", attempts, validate=_v_mask01)
+    return np.asarray(out) != 0
+
+
 def _v_mask01(out) -> bool:
     a = np.asarray(out)
     return bool(a.size == 0 or (a.min() >= 0 and a.max() <= 1))

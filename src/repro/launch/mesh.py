@@ -33,3 +33,26 @@ def make_host_mesh(data: int = 1, model: int = 1):
     model = max(1, min(model, n // data))
     return jax.make_mesh((data, model), ("data", "model"),
                          **_axis_kwargs(2))
+
+
+def make_shard_mesh(n_shards: int):
+    """1-axis ``("shard",)`` mesh for the Morton-prefix store shards.
+
+    Sized to the largest divisor of `n_shards` that fits the local device
+    count, so a stacked ``(S, ...)`` per-shard batch partitions evenly —
+    each device sweeps its resident shards with `lax.map` when S exceeds
+    the device count (CI's shardlane forces 8 host devices via XLA_FLAGS).
+    """
+    n = len(jax.devices())
+    d = max(k for k in range(1, min(n, n_shards) + 1) if n_shards % k == 0)
+    return jax.make_mesh((d,), ("shard",), **_axis_kwargs(1))
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map across versions (older jax: experimental, check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)

@@ -24,13 +24,9 @@ import jax.numpy as jnp
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
-    """jax.shard_map across versions (older jax: experimental, check_rep)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              check_rep=False)
+    """jax.shard_map across versions; see launch/mesh.shard_map_compat."""
+    from ..launch.mesh import shard_map_compat
+    return shard_map_compat(f, mesh, in_specs, out_specs)
 
 
 def _merge_topk(scores, ids, new_scores, new_ids, k):

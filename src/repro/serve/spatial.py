@@ -40,7 +40,7 @@ import dataclasses
 
 import numpy as np
 
-from ..core import fault, node_select, spatial_join
+from ..core import fault, node_select, shard as shard_mod, spatial_join
 from ..core.executor import ExecStats, QueryCursor, StreakEngine
 from ..core.join import Relation
 from ..core.query import Query
@@ -198,25 +198,29 @@ class SpatialServeEngine:
     # ------------------------------------------------------------------
     def _slot_sip(self, r: dict) -> list:
         """Per-slot serial Phase-1/2 (the pooled call's degraded mode): the
-        same candidate_nodes + select_batch, one tenant's rows only."""
-        tree = self.engine.store.tree
+        same per-shard candidate_nodes + select_batch, one tenant's rows
+        only. Returns per-row lists of per-shard V* arrays."""
+        shards = shard_mod.shard_views(self.engine.store)
         policy = self.engine.config.policy
         boxes = [b if b is not None else np.zeros((0, 4))
                  for b in r["boxes"]]
         n = len(boxes)
-        in_v = tree.candidate_nodes(boxes, np.full(n, r["dist_norm"]),
-                                    [r["driven_cs"]] * n,
-                                    prepared=[r["prepared"]] * n,
-                                    probe_backend=policy.probe,
-                                    descend_backend=policy.descend,
-                                    cs_path=[r.get("cs_path")] * n)
-        sel = node_select.select_batch(
-            tree, in_v, [r["driven_cs"]] * n,
-            self.engine.config.select_params,
-            card_all=np.stack([r["card_all"]] * n))
+        cs_path = r.get("cs_path")
+        sel_shards = []
+        for si, sh in enumerate(shards):
+            in_v = sh.tree.candidate_nodes(
+                boxes, np.full(n, r["dist_norm"]), [r["driven_cs"]] * n,
+                prepared=[r["prepared"]] * n,
+                probe_backend=policy.probe, descend_backend=policy.descend,
+                cs_path=[cs_path[si] if cs_path is not None else None] * n)
+            sel_shards.append(node_select.select_batch(
+                sh.tree, in_v, [r["driven_cs"]] * n,
+                self.engine.config.select_params,
+                card_all=np.stack([r["card_all"][si]] * n)))
         self.stats.sip_batches += 1
         self.stats.sip_blocks += n
-        return list(sel)
+        return [[sel_shards[si][i] for si in range(len(shards))]
+                for i in range(n)]
 
     def step(self) -> int:
         """One iteration: admit, advance every active slot one driver block
@@ -256,11 +260,13 @@ class SpatialServeEngine:
         sip_slots = [(s, r) for (s, r) in work if r["need_sip"]]
         v_stars: dict[int, list | None] = {s: None for (s, r) in work}
         if sip_slots:
-            # one pooled Phase-1/2 call over every tenant's window rows;
-            # rows of one tenant share a CS array (and thus one frontier
-            # group), different tenants' groups ride the same batch, and
-            # identical rows from same-shape tenants collapse to one row
-            tree = self.engine.store.tree
+            # one pooled Phase-1/2 call PER SHARD over every tenant's
+            # window rows; rows of one tenant share a CS array (and thus
+            # one frontier group), different tenants' groups ride the same
+            # batch, and identical rows from same-shape tenants collapse
+            # to one row — the dedup row set is shard-independent, so the
+            # per-shard sweep reuses it as-is
+            shards = shard_mod.shard_views(self.engine.store)
             policy = self.engine.config.policy
             boxes, cs_sets, prepared, dists, cards = [], [], [], [], []
             cs_paths = []
@@ -288,16 +294,25 @@ class SpatialServeEngine:
                     rows.append(idx)
                 spans.append((s, rows))
             try:
-                in_v = tree.candidate_nodes(boxes, np.array(dists), cs_sets,
-                                            prepared=prepared,
-                                            probe_backend=policy.probe,
-                                            descend_backend=policy.descend,
-                                            cs_path=cs_paths)
-                sel = node_select.select_batch(
-                    tree, in_v, cs_sets, self.engine.config.select_params,
-                    card_all=np.stack(cards))
+                # cards[i] / cs_paths[i] are per-shard lists (tenant
+                # cursors expose one entry per shard view, same order)
+                sel_shards = []
+                for si, sh in enumerate(shards):
+                    in_v = sh.tree.candidate_nodes(
+                        boxes, np.array(dists), cs_sets,
+                        prepared=prepared,
+                        probe_backend=policy.probe,
+                        descend_backend=policy.descend,
+                        cs_path=[p[si] if p is not None else None
+                                 for p in cs_paths])
+                    sel_shards.append(node_select.select_batch(
+                        sh.tree, in_v, cs_sets,
+                        self.engine.config.select_params,
+                        card_all=np.stack([c[si] for c in cards])))
                 for s, rows in spans:
-                    v_stars[s] = [sel[i] for i in rows]
+                    v_stars[s] = [[sel_shards[si][i]
+                                   for si in range(len(shards))]
+                                  for i in rows]
                 self.stats.sip_batches += 1
                 self.stats.sip_blocks += len(boxes)
             except Exception:       # noqa: BLE001 — poisoned pooled call

@@ -60,12 +60,24 @@ CLASSES = {
 _DATASETS: dict = {}
 _ENGINES: dict = {}
 _ORACLE: dict = {}
+_SHARDED: dict = {}
 
 
 def _dataset(seed: int):
     if seed not in _DATASETS:
         _DATASETS[seed] = make_lgd(n_per_class=60, seed=seed, block=64)
     return _DATASETS[seed]
+
+
+def _sharded_engine(seed: int, n_shards: int, **cfg) -> StreakEngine:
+    from repro.core.shard import shard_store
+    skey = (seed, n_shards)
+    if skey not in _SHARDED:
+        _SHARDED[skey] = shard_store(_dataset(seed).store, n_shards)
+    ekey = (seed, n_shards, tuple(sorted(cfg.items())))
+    if ekey not in _ENGINES:
+        _ENGINES[ekey] = StreakEngine(_SHARDED[skey], ExecConfig(**cfg))
+    return _ENGINES[ekey]
 
 
 def _engine(seed: int, **cfg) -> StreakEngine:
@@ -172,6 +184,26 @@ def test_fuzz_serving_matches_full_scan(shape):
     reqs = srv.serve([q] + companions)
     want = _oracle_scores(0, shape)
     np.testing.assert_array_equal(np.sort(reqs[0].scores), np.sort(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(SEED, QSHAPE, st.sampled_from([2, 4, 8]),
+       st.sampled_from(["numpy", "fused"]))
+def test_fuzz_sharded_matches_unsharded(seed, shape, n_shards, join_backend):
+    """Shard-count invariance under fuzzed query shapes: the Morton-prefix
+    sharded engine must be BIT-identical (same rows, same order — not just
+    the same score multiset) to the unsharded engine, which itself matches
+    the full-scan oracle."""
+    q = _mk_query(seed, *shape)
+    cfg = dict(join_backend=join_backend, fused_batch_cols=256)
+    got0, rows0, _ = _engine(seed, **cfg).execute(q)
+    got1, rows1, _ = _sharded_engine(seed, n_shards, **cfg).execute(q)
+    np.testing.assert_array_equal(got1, got0)
+    assert rows1.keys() == rows0.keys()
+    for c in rows0:
+        np.testing.assert_array_equal(rows1[c], rows0[c])
+    np.testing.assert_array_equal(np.sort(got1),
+                                  np.sort(_oracle_scores(seed, shape)))
 
 
 # ---------------------------------------------------- deterministic axes ---

@@ -121,7 +121,8 @@ def test_legacy_and_policy_engines_bit_identical(lgd):
 PUBLIC_API = (
     "BackendPolicy", "ExecConfig", "ExecStats", "FaultPlan", "FaultRule",
     "QuadStore", "Query", "QueryDeadline", "Ranking", "Relation",
-    "SpatialFilter", "StreakEngine", "TriplePattern", "Var", "build_store",
+    "ShardedQuadStore", "SpatialFilter", "StreakEngine", "TriplePattern",
+    "Var", "build_store", "shard_store",
 )
 
 
