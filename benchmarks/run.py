@@ -22,9 +22,9 @@ def _parse_row(row: str) -> dict:
 
 
 def main() -> None:
-    from . import (bench_aps, bench_engines, bench_join, bench_kernels,
-                   bench_refine, bench_serve, bench_sip, bench_sizes,
-                   bench_vary_k)
+    from . import (bench_aps, bench_engines, bench_geo, bench_join,
+                   bench_kernels, bench_refine, bench_serve, bench_sip,
+                   bench_sizes, bench_vary_k)
     suites = [
         ("table1/3 sizes", bench_sizes),
         ("fig7 SIP", bench_sip),
@@ -35,6 +35,7 @@ def main() -> None:
         ("refinement", bench_refine),
         ("kernels", bench_kernels),
         ("serving", bench_serve),
+        ("geographica shapes", bench_geo),
     ]
     args = [a for a in sys.argv[1:] if a != "--json"]
     write_json = "--json" in sys.argv[1:]

@@ -31,25 +31,37 @@ class BaselineStats:
 
 
 class FullScanEngine:
-    """Evaluate everything, sort at the end (no early termination)."""
+    """Evaluate everything, sort at the end (no early termination).
+
+    Also the brute-force differential oracle for every non-top-k query
+    shape (core/shapes.py): range / within-distance selections, per-driver
+    kNN, and the non-top-k spatial join skip all index pruning here — full
+    cartesian candidate sets, per-entity python predicate loops — but score
+    with the same exact-geometry primitives, so results are bit-identical
+    to the engine when (and only when) the engine's pruning is lossless.
+    """
 
     def __init__(self, store: QuadStore):
         self.store = store
 
+    def _full_side(self, side) -> Relation:
+        store = self.store
+        if not side.all_ordered:
+            return Relation({side.entity_var:
+                             np.unique(store.tree.obj_ids)})
+        rel = scan_pattern(store, side.all_ordered[0])
+        for tp in side.all_ordered[1:]:
+            rel = join(rel, scan_pattern(store, tp))
+        return rel
+
     def execute(self, q: Query) -> tuple[np.ndarray, Relation, BaselineStats]:
         store = self.store
         stats = BaselineStats()
+        if q.spatial is not None and q.shape() != "topk":
+            return self._execute_shape(q, stats)
         plan = plan_query(store, q)
         driver, driven = plan.driver, plan.driven
-
-        def full_side(side):
-            if not side.all_ordered:
-                return Relation({side.entity_var:
-                                 np.unique(store.tree.obj_ids)})
-            rel = scan_pattern(store, side.all_ordered[0])
-            for tp in side.all_ordered[1:]:
-                rel = join(rel, scan_pattern(store, tp))
-            return rel
+        full_side = self._full_side
 
         drv = full_side(driver)
         dvn = full_side(driven)
@@ -90,6 +102,86 @@ class FullScanEngine:
         order = np.argsort(-keys, kind="stable")[: plan.k]
         scores = keys[order] if plan.descending else -keys[order]
         return scores, out.take(order), stats
+
+    # -- non-top-k shape oracles (core/shapes.py differential targets) ----
+    def _execute_shape(self, q: Query, stats: BaselineStats):
+        from . import shapes
+        store = self.store
+        plan = plan_query(store, q)
+        shape = plan.shape
+        pool = store.geom_pool
+
+        def ents_of(rel, var):
+            return shapes._ents_boxes(store, rel, var)[0]
+
+        def geom_slices(ents):
+            rows = store.geom_rows(ents)
+            off = pool.offsets
+            return [pool.points[off[r]:off[r + 1]].astype(np.float64)
+                    for r in rows]
+
+        drv = self._full_side(plan.driver)
+        stats.rows_joined += drv.n
+        a_ents = ents_of(drv, plan.driver.entity_var)
+
+        if shape == "range":
+            xmin, ymin, xmax, ymax = (float(v) for v in q.spatial.window)
+            hit = np.array(
+                [bool(((g[:, 0] >= xmin) & (g[:, 0] <= xmax)
+                       & (g[:, 1] >= ymin) & (g[:, 1] <= ymax)).any())
+                 for g in geom_slices(a_ents)], dtype=bool) \
+                if len(a_ents) else np.zeros(0, dtype=bool)
+            qual = a_ents[hit]
+            stats.candidates = len(qual)
+            scores, rows = shapes._select_rows(
+                drv, plan.driver.entity_var, qual, np.zeros(len(qual)))
+            return scores, rows, stats
+
+        if shape == "within":
+            from . import geometry
+            c = np.asarray(q.spatial.center, dtype=np.float64)
+            dist_fn = (geometry.haversine_km if plan.metric == "haversine"
+                       else geometry.euclid_dist)
+            d = np.array([float(dist_fn(g, c[None, :]).min())
+                          for g in geom_slices(a_ents)], dtype=np.float64) \
+                if len(a_ents) else np.zeros(0)
+            ok = d <= float(plan.dist_world)
+            qual, dq = a_ents[ok], d[ok]
+            stats.candidates = len(qual)
+            scores, rows = shapes._select_rows(
+                drv, plan.driver.entity_var, qual, dq)
+            return scores, rows, stats
+
+        # binary shapes: full cartesian candidate pairs, exact distances
+        dvn = self._full_side(plan.driven)
+        stats.rows_joined += dvn.n
+        b_ents = ents_of(dvn, plan.driven.entity_var)
+        na, nb = len(a_ents), len(b_ents)
+        pi = np.repeat(np.arange(na, dtype=np.int64), nb)
+        pj = np.tile(np.arange(nb, dtype=np.int64), na)
+        stats.pairs_checked = len(pi)
+        d = spatial_join.exact_pair_distance(
+            pool, store.geom_rows(a_ents)[pi], store.geom_rows(b_ents)[pj],
+            plan.metric)
+
+        if shape == "join":
+            ok = d <= float(plan.dist_world)
+            pi, pj, d = pi[ok], pj[ok], d[ok]
+        else:   # knn: k smallest per driver by (distance, driven entity)
+            k = int(q.spatial.knn)
+            order = np.lexsort((b_ents[pj], d, pi))
+            pi, pj, d = pi[order], pj[order], d[order]
+            first = np.r_[True, pi[1:] != pi[:-1]] if len(pi) \
+                else np.zeros(0, dtype=bool)
+            grp = np.flatnonzero(first)
+            width = np.diff(np.r_[grp, len(pi)])
+            rank = np.arange(len(pi), dtype=np.int64) - np.repeat(grp, width)
+            sel = rank < k
+            pi, pj, d = pi[sel], pj[sel], d[sel]
+        stats.candidates = len(pi)
+        scores, rows = shapes._assemble_pairs(
+            plan, drv, dvn, a_ents[pi], b_ents[pj], d)
+        return scores, rows, stats
 
 
 class SyncRTreeEngine(StreakEngine):

@@ -144,7 +144,16 @@ class StreakEngine:
         rel = base
         for tp in patterns:
             if rel.n == 0:
-                break
+                # empty stays empty, but the schema must stay complete —
+                # downstream consumers (and the brute-force oracles) expect
+                # every pattern's variables as (empty) columns
+                scan = self._cached_scan(tp)
+                cols = {c: rel[c] for c in rel.keys()}
+                for c in scan.keys():
+                    if c not in cols:
+                        cols[c] = np.empty(0, dtype=np.int64)
+                rel = Relation(cols)
+                continue
             rel = join(rel, self._cached_scan(tp), impl=impl, backend=backend)
         return rel
 
@@ -287,14 +296,19 @@ class StreakEngine:
     # ------------------------------------------------------------------
     def execute(self, q: Query, deadline=None
                 ) -> tuple[np.ndarray, Relation, ExecStats]:
-        cur = QueryCursor(self, q, deadline=deadline)
+        cur = self.cursor(q, deadline=deadline)
         while not cur.done:
             cur.step()
         return cur.results()
 
-    def cursor(self, q: Query, deadline=None) -> "QueryCursor":
+    def cursor(self, q: Query, deadline=None):
         """Steppable execution state (one driver block per step) for the
-        multi-tenant serving loop (serve/spatial.py)."""
+        multi-tenant serving loop (serve/spatial.py). Non-top-k shapes
+        (range / within / kNN / spatial join, core/shapes.py) return a
+        `ShapeCursor` speaking the same protocol."""
+        if q.spatial is not None and q.shape() != "topk":
+            from .shapes import ShapeCursor
+            return ShapeCursor(self, q, deadline=deadline)
         return QueryCursor(self, q, deadline=deadline)
 
     # ------------------------------------------------------------------

@@ -74,6 +74,7 @@ class QueryPlan:
     probe_backend: str | None = None    # Bloom CS probes (PROBE_BACKENDS)
     join_backend: str = "numpy"         # Phase-3 MBR join (JOIN_BACKENDS)
     descend_backend: str = "numpy"      # Phase-1 traversal (DESCEND_BACKENDS)
+    shape: str = "topk"                 # query shape (core/query.Query.shape)
 
 
 def resolve_spatial_vars(store: QuadStore, q: Query) -> tuple[str, str]:
@@ -86,7 +87,11 @@ def resolve_spatial_vars(store: QuadStore, q: Query) -> tuple[str, str]:
                     and isinstance(tp.s, Var)):
                 return tp.s.name
         return v.name
-    return resolve(q.spatial.a), resolve(q.spatial.b)
+    var_a = resolve(q.spatial.a)
+    # unary shapes (range / within-distance) have no second geometry var;
+    # the "driven" side collapses to the driver's entity var (empty side)
+    var_b = resolve(q.spatial.b) if q.spatial.b is not None else var_a
+    return var_a, var_b
 
 
 def _connected_component(patterns: list, seed_var: str) -> list:
@@ -159,7 +164,17 @@ def plan_query(store: QuadStore, q: Query,
     `rank_backend` kwargs are the pre-policy per-stage form, kept for
     direct callers; they are ignored when `policy` is given.
     """
-    assert q.spatial is not None, "plan_query expects a spatial top-k query"
+    assert q.spatial is not None, "plan_query expects a spatial query"
+    shape = q.shape()
+    if shape in ("range", "within", "knn", "join") and q.ranking is not None:
+        raise ValueError(
+            f"{shape!r}-shaped queries are selections; ranking is only "
+            "supported on the top-k distance-join shape")
+    if shape in ("range", "within") and q.spatial.b is not None:
+        raise ValueError(f"{shape!r}-shaped queries are unary: spatial.b "
+                         "must be None")
+    if shape in ("knn", "join", "topk") and q.spatial.b is None:
+        raise ValueError(f"{shape!r}-shaped queries need spatial.b")
     if policy is None:
         policy = BackendPolicy(impl=join_impl or "auto",
                                rank=rank_backend or "auto")
@@ -170,6 +185,11 @@ def plan_query(store: QuadStore, q: Query,
     covered = set(map(id, side_a_patterns))
     side_b_patterns = [tp for tp in patterns if id(tp) not in covered]
     # safety: anything left unattached joins the a-side
+    if shape in ("range", "within") and side_b_patterns:
+        # unary shapes have one side only; disconnected patterns would
+        # otherwise dangle on a nonexistent driven side
+        side_a_patterns = side_a_patterns + side_b_patterns
+        side_b_patterns = []
     ranking_weights = {v.name: w for v, w in (q.ranking.terms if q.ranking else ())}
     descending = q.ranking.descending if q.ranking else True
 
@@ -180,7 +200,11 @@ def plan_query(store: QuadStore, q: Query,
     # primary numeric scan; among those, the smaller index converges faster.
     def scan_rows(sp: SidePlan) -> int:
         return sp.scan.n_rows if sp.scan is not None else 1 << 62
-    if force_driver == "a":
+    if shape in ("range", "within", "knn"):
+        # unary shapes have only the a-side; kNN's FILTER is directional
+        # (k nearest ?b per ?a entity), so ?a's side MUST drive
+        driver, driven = side_a, side_b
+    elif force_driver == "a":
         driver, driven = side_a, side_b
     elif force_driver == "b":
         driver, driven = side_b, side_a
@@ -192,9 +216,12 @@ def plan_query(store: QuadStore, q: Query,
                           else (side_b, side_a))
 
     # driven CS compatibility: every CS whose predicate set contains the
-    # driven entity's query predicates
-    driven_preds = {int(tp.p) for tp in driven.patterns
-                    if isinstance(tp.s, Var) and tp.s.name == driven.entity_var
+    # driven entity's query predicates. Unary shapes filter the DRIVER's
+    # entities against the tree (there is no driven side), so their CS set
+    # comes from the driver's patterns instead.
+    cs_side = driver if shape in ("range", "within") else driven
+    driven_preds = {int(tp.p) for tp in cs_side.patterns
+                    if isinstance(tp.s, Var) and tp.s.name == cs_side.entity_var
                     and not isinstance(tp.p, Var)}
     matching = [cid for cid, preds in store.cs_catalog.items()
                 if driven_preds <= preds]
@@ -207,4 +234,4 @@ def plan_query(store: QuadStore, q: Query,
                      descending=descending, k=q.k,
                      join_impl=policy.impl, rank_backend=policy.rank,
                      probe_backend=policy.probe, join_backend=policy.join,
-                     descend_backend=policy.descend)
+                     descend_backend=policy.descend, shape=shape)

@@ -40,11 +40,37 @@ class TriplePattern:
 
 @dataclasses.dataclass(frozen=True)
 class SpatialFilter:
-    """FILTER(distance(?a, ?b) < dist) in world units."""
+    """Spatial predicate over geometry variables, in world units.
+
+    The binary form is the paper's FILTER(distance(?a, ?b) < dist). The
+    Geographica-shaped extensions reuse the same carrier:
+
+    - ``window=(xmin, ymin, xmax, ymax)`` — spatial *range*: ?a's exact
+      geometry has a point inside the (closed) window. Unary (``b=None``).
+    - ``center=(x, y)`` — *within-distance*: min distance from ?a's exact
+      geometry to the point is <= ``dist``. Unary (``b=None``).
+    - ``knn=k`` — per-?a-entity k nearest ?b entities by exact geometry
+      distance (short lists allowed when fewer than k candidates exist).
+    - binary, no ranking on the query — non-top-k *spatial join*: every
+      (?a, ?b) pair within ``dist``.
+    """
     a: Var
-    b: Var
-    dist: float
+    b: Var | None = None
+    dist: float = 0.0
     metric: str = "euclid"   # or "haversine"
+    window: tuple | None = None   # (xmin, ymin, xmax, ymax) world coords
+    center: tuple | None = None   # (x, y) world coords
+    knn: int | None = None        # per-driver-entity k
+
+    def shape(self) -> str:
+        """One of "range", "within", "knn", "join", "topk"."""
+        if self.window is not None:
+            return "range"
+        if self.center is not None:
+            return "within"
+        if self.knn is not None:
+            return "knn"
+        return "topk"   # binary; Query.shape() downgrades to "join"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +90,18 @@ class Query:
     spatial: SpatialFilter | None
     ranking: Ranking | None
     k: int = 100
+
+    def shape(self) -> str:
+        """Query shape: "topk" (paper §2), "range", "within", "knn", or
+        "join" (binary spatial filter without a ranking = non-top-k
+        spatial join). Selection shapes ignore `ranking`/`k`; "knn" takes
+        its per-driver k from ``spatial.knn``."""
+        if self.spatial is None:
+            return "scan"
+        s = self.spatial.shape()
+        if s == "topk" and self.ranking is None:
+            return "join"
+        return s
 
     def all_vars(self) -> list[Var]:
         seen, out = set(), []

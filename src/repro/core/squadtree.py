@@ -180,14 +180,23 @@ class PackedEList:
         out = cs - np.repeat(cs[first] - out[first], cnt)
         return self.src[out] if self.src is not None else out
 
-    def ranks_of(self, node_idx: np.ndarray) -> np.ndarray:
-        """Ranks of the given node indices that have nonempty lists."""
+    def ranks_of(self, node_idx: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """(ranks, positions) for the input node indices with nonempty
+        lists: ``ranks[t]`` indexes `nodes`/`counts` and ``positions[t]``
+        is the index into `node_idx` it came from, so callers that align
+        decoded lists against their input order can re-associate them.
+        Nodes with empty E-lists yield no entry (they have no rank) —
+        their absence is visible as a gap in ``positions``.
+        """
         node_idx = np.asarray(node_idx, dtype=np.int64)
         if not len(self.nodes):
-            return np.empty(0, dtype=np.int64)
+            return (np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.int64))
         r = np.searchsorted(self.nodes, node_idx)
         r_c = np.minimum(r, len(self.nodes) - 1)
-        return r_c[(self.nodes[r_c] == node_idx) & (r < len(self.nodes))]
+        hit = (self.nodes[r_c] == node_idx) & (r < len(self.nodes))
+        return r_c[hit], np.flatnonzero(hit)
 
     def nbytes(self) -> int:
         # `src` is the tree's own obj_ids array, shared not owned — it is
@@ -276,7 +285,7 @@ class SQuadTree:
 
     def elist(self, node: int) -> np.ndarray:
         if self.packed is not None:
-            ranks = self.packed.ranks_of(np.array([node], dtype=np.int64))
+            ranks, _ = self.packed.ranks_of(np.array([node], dtype=np.int64))
             return (self.packed.decode(ranks) if len(ranks)
                     else np.empty(0, dtype=np.int64))
         a, b = self.elist_offsets[node], self.elist_offsets[node + 1]
@@ -590,7 +599,7 @@ class SQuadTree:
             return intervals, np.empty(0, dtype=np.int64)
         if self.packed is not None:
             explicit = np.unique(
-                self.packed.decode(self.packed.ranks_of(v_star)))
+                self.packed.decode(self.packed.ranks_of(v_star)[0]))
         else:
             explicit = np.unique(self.elist_ids[csr_gather(starts, cnt)])
         return intervals, explicit

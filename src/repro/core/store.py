@@ -456,6 +456,21 @@ def build_store(quads: np.ndarray,
     if geometries:
         ent = np.array(sorted(geometries.keys()), dtype=np.int64)
         boxes = np.array([geometries[int(e)] for e in ent], dtype=np.float64)
+        # the geometry pool stores points as f32; the MBR must bound the
+        # STORED geometry, not the caller's f64 coordinates, or a query at
+        # exactly the quantized point (e.g. within-distance, dist = 0) gets
+        # MBR-pruned while exact refinement would keep it. Expand each box
+        # to cover the f32 round-trip of its exact points.
+        if exact_geoms:
+            for i, e in enumerate(ent):
+                pts = exact_geoms.get(int(e))
+                if pts is None or len(pts) == 0:
+                    continue
+                q = np.asarray(pts, dtype=np.float32).astype(np.float64)
+                boxes[i, 0] = min(boxes[i, 0], q[:, 0].min())
+                boxes[i, 1] = min(boxes[i, 1], q[:, 1].min())
+                boxes[i, 2] = max(boxes[i, 2], q[:, 0].max())
+                boxes[i, 3] = max(boxes[i, 3], q[:, 1].max())
         cs_keys, cs_vals = _sorted_lut(cs_of)
         cs_self = lut_get(cs_keys, cs_vals, ent)
         # incoming CS: subjects s with (s, p, e); outgoing CS: objects o of

@@ -274,3 +274,127 @@ def test_legacy_knobs_bit_identical_to_policy(legacy):
         assert rows_l.keys() == rows_p.keys()
         for c in rows_p:
             np.testing.assert_array_equal(rows_l[c], rows_p[c])
+
+
+# ------------------------------------------------- query-shape diversity --
+# Geographica-shaped non-top-k shapes (core/shapes.py): range / within /
+# kNN / spatial join, each bit-identical to its FullScanEngine brute-force
+# oracle — rows AND order, not just score multisets (shape output uses a
+# canonical deterministic ordering, so exact comparison is well-defined).
+
+_SHAPE_ORACLE: dict = {}
+
+
+def _mk_shape_query(seed, kind, cls_a, cls_b, p1, p2) -> Query:
+    ns = _dataset(seed).ns
+    pa, pb = Var("place"), Var("nplace")
+    patterns = [
+        TriplePattern(pa, Var("typePred1"), ns[cls_a], g=Var("r")),
+        TriplePattern(Var("r"), ns["hasConfidence"], Var("conf")),
+        TriplePattern(pa, ns["hasGeometry"], Var("g1")),
+        TriplePattern(pb, Var("typePred2"), ns[cls_b], g=Var("r1")),
+        TriplePattern(Var("r1"), ns["hasConfidence"], Var("conf1")),
+        TriplePattern(pb, ns["hasGeometry"], Var("g2")),
+    ]
+    if kind == "range":
+        spatial = SpatialFilter(Var("g1"), None,
+                                window=(p1, p2, p1 + 30.0, p2 + 22.0))
+    elif kind == "within":
+        spatial = SpatialFilter(Var("g1"), None, dist=p2,
+                                center=(p1, 100.0 - p1))
+    elif kind == "knn":
+        spatial = SpatialFilter(Var("g1"), Var("g2"), knn=int(p1))
+    else:  # join
+        spatial = SpatialFilter(Var("g1"), Var("g2"), dist=p1)
+    return Query(select=(pa, pb), patterns=tuple(patterns),
+                 spatial=spatial, ranking=None)
+
+
+def _shape_oracle(seed, sshape):
+    key = (seed, sshape)
+    if key not in _SHAPE_ORACLE:
+        q = _mk_shape_query(seed, *sshape)
+        _SHAPE_ORACLE[key] = FullScanEngine(_dataset(seed).store).execute(q)
+    return _SHAPE_ORACLE[key]
+
+
+def _check_shape(seed, sshape, engine):
+    q = _mk_shape_query(seed, *sshape)
+    want_s, want_r, _ = _shape_oracle(seed, sshape)
+    got_s, got_r, _ = engine.execute(q)
+    np.testing.assert_array_equal(got_s, want_s)
+    assert sorted(got_r.keys()) == sorted(want_r.keys()), (sshape,)
+    for c in want_r.keys():
+        np.testing.assert_array_equal(got_r[c], want_r[c])
+
+
+_SHAPE_PARAMS = {
+    # kind -> (p1 choices, p2 choices); see _mk_shape_query for meaning
+    "range": ([0.0, 25.0, 60.0, 95.0], [0.0, 40.0, 80.0]),
+    "within": ([5.0, 30.0, 50.0, 90.0], [0.0, 1.5, 8.0, 25.0]),  # p2 = dist
+    "knn": ([1.0, 2.0, 5.0, 1000.0], [0.0]),                     # p1 = k
+    "join": ([0.25, 2.0, 6.0], [0.0]),                           # p1 = dist
+}
+
+
+@st.composite
+def _sshape_strategy(draw):
+    kind = draw(st.sampled_from(sorted(_SHAPE_PARAMS)))
+    p1s, p2s = _SHAPE_PARAMS[kind]
+    return (kind, draw(st.sampled_from(CLS)), draw(st.sampled_from(CLS)),
+            draw(st.sampled_from(p1s)), draw(st.sampled_from(p2s)))
+
+
+SSHAPE = _sshape_strategy()
+
+SECONF = st.tuples(
+    st.sampled_from(["merge", "looped"]),            # join_impl
+    st.sampled_from(["numpy", "kernel", "fused"]),   # join_backend
+    st.sampled_from([None, "interpret"]),            # probe_backend
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEED, SSHAPE, SECONF)
+def test_fuzz_shapes_match_full_scan(seed, sshape, econf):
+    join_impl, join_backend, probe_backend = econf
+    eng = _engine(seed, join_impl=join_impl, join_backend=join_backend,
+                  probe_backend=probe_backend, fused_batch_cols=256)
+    _check_shape(seed, sshape, eng)
+
+
+@settings(max_examples=15, deadline=None)
+@given(SEED, SSHAPE, st.sampled_from([2, 4]))
+def test_fuzz_shapes_sharded_match_full_scan(seed, sshape, n_shards):
+    _check_shape(seed, sshape, _sharded_engine(seed, n_shards))
+
+
+# fixed-seed regression corpus: shapes that exercised real bugs during
+# development (kNN certification + pair-score keying, empty driven sides,
+# window slivers, zero-radius within) plus one of each kind per class mix —
+# deterministic, no sampler involved
+_SHAPE_CORPUS = [
+    ("range", "class:hotel", "class:park", 25.0, 40.0),
+    ("range", "class:pub", "class:police", 95.0, 80.0),     # mostly empty
+    ("within", "class:park", "class:road", 50.0, 0.0),      # zero radius
+    ("within", "class:hotel", "class:pub", 30.0, 25.0),
+    ("knn", "class:hotel", "class:park", 2.0, 0.0),         # cert. doubling
+    ("knn", "class:police", "class:pub", 1000.0, 0.0),      # k > candidates
+    ("join", "class:hotel", "class:park", 6.0, 0.0),
+    ("join", "class:road", "class:police", 0.25, 0.0),      # near-empty
+]
+
+
+@pytest.mark.parametrize("sshape", _SHAPE_CORPUS,
+                         ids=lambda s: f"{s[0]}-{s[1][6:]}-{s[2][6:]}")
+def test_shape_regression_corpus(sshape):
+    _check_shape(0, sshape, _engine(0))
+    _check_shape(0, sshape, _sharded_engine(0, 4))
+
+
+@pytest.mark.parametrize("descend", ["numpy", "interpret"])
+def test_shape_descend_backends_match_oracle(descend):
+    from repro import BackendPolicy
+    for sshape in _SHAPE_CORPUS[::3]:
+        _check_shape(0, sshape, _engine(0, policy=BackendPolicy(
+            descend=descend)))

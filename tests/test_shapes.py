@@ -1,0 +1,344 @@
+"""Geographica-shaped query diversity: range / within-distance / kNN /
+non-top-k spatial join, differential vs the FullScanEngine brute-force
+oracles, plus the degenerate-geometry and empty/short-result edge cases
+those shapes flush out (coincident points, zero-area MBRs, k > candidates,
+all-pruned shards, compressed E-list gaps)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import spatial_join
+from repro.core.baselines import FullScanEngine
+from repro.core.executor import ExecConfig, StreakEngine
+from repro.core.fault import QueryDeadline
+from repro.core.planner import plan_query
+from repro.core.policy import BackendPolicy
+from repro.core.query import Query, Ranking, SpatialFilter, TriplePattern, Var
+from repro.core.shard import shard_store
+from repro.data.synth_rdf import make_lgd
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_lgd(n_per_class=80, seed=11, block=64)
+
+
+@pytest.fixture(scope="module")
+def oracle(ds):
+    return FullScanEngine(ds.store)
+
+
+def _shape_query(ds, spatial, cls_a="class:hotel", cls_b="class:park",
+                 extra_b=()):
+    ns = ds.ns
+    pa, pb = Var("place"), Var("nplace")
+    patterns = [
+        TriplePattern(pa, Var("typePred1"), ns[cls_a], g=Var("r")),
+        TriplePattern(Var("r"), ns["hasConfidence"], Var("conf")),
+        TriplePattern(pa, ns["hasGeometry"], Var("g1")),
+        TriplePattern(pb, Var("typePred2"), ns[cls_b], g=Var("r1")),
+        TriplePattern(Var("r1"), ns["hasConfidence"], Var("conf1")),
+        TriplePattern(pb, ns["hasGeometry"], Var("g2")),
+    ]
+    for p in extra_b:
+        patterns.append(TriplePattern(pb, ns[p], Var(f"b_{p}")))
+    return Query(select=(pa, pb), patterns=tuple(patterns),
+                 spatial=spatial, ranking=None)
+
+
+def _assert_identical(engine, oracle, q):
+    es, erows, estats = engine.execute(q)
+    os_, orows, _ = oracle.execute(q)
+    np.testing.assert_array_equal(es, os_)
+    assert sorted(erows.keys()) == sorted(orows.keys())
+    for c in orows.keys():
+        np.testing.assert_array_equal(erows[c], orows[c])
+    return es, erows, estats
+
+
+# ------------------------------------------------------------ shape model --
+def test_query_shape_classification():
+    g1, g2 = Var("g1"), Var("g2")
+    rank = Ranking(((Var("c"), 1.0),))
+    topk = Query((), (), SpatialFilter(g1, g2, 5.0), rank)
+    assert topk.shape() == "topk"
+    assert Query((), (), SpatialFilter(g1, g2, 5.0), None).shape() == "join"
+    assert Query((), (), SpatialFilter(g1, g2, knn=3), None).shape() == "knn"
+    assert Query((), (), SpatialFilter(g1, None, window=(0, 0, 1, 1)),
+                 None).shape() == "range"
+    assert Query((), (), SpatialFilter(g1, None, dist=1.0, center=(0, 0)),
+                 None).shape() == "within"
+    assert Query((), (), None, rank).shape() == "scan"
+
+
+def test_planner_rejects_malformed_shapes(ds):
+    rank = Ranking(((Var("conf"), 1.0),))
+    q = _shape_query(ds, SpatialFilter(Var("g1"), None, window=(0, 0, 9, 9)))
+    with pytest.raises(ValueError, match="selections"):
+        plan_query(ds.store, dataclasses.replace(q, ranking=rank))
+    with pytest.raises(ValueError, match="unary"):
+        plan_query(ds.store, dataclasses.replace(
+            q, spatial=SpatialFilter(Var("g1"), Var("g2"),
+                                     window=(0, 0, 9, 9))))
+    with pytest.raises(ValueError, match="spatial.b"):
+        plan_query(ds.store, dataclasses.replace(
+            q, spatial=SpatialFilter(Var("g1"), None, knn=3)))
+    with pytest.raises(ValueError, match="positive"):
+        StreakEngine(ds.store).execute(dataclasses.replace(
+            q, spatial=SpatialFilter(Var("g1"), Var("g2"), knn=0)))
+
+
+# ------------------------------------------- differential, backends/shards --
+SHAPES = {
+    "range": SpatialFilter(Var("g1"), None, window=(15.0, 10.0, 70.0, 60.0)),
+    "range_sliver": SpatialFilter(Var("g1"), None,
+                                  window=(40.0, 0.0, 40.5, 100.0)),
+    "range_outside": SpatialFilter(Var("g1"), None,
+                                   window=(400.0, 400.0, 500.0, 500.0)),
+    "within": SpatialFilter(Var("g1"), None, dist=18.0, center=(50.0, 30.0)),
+    "within_tiny": SpatialFilter(Var("g1"), None, dist=0.01,
+                                 center=(50.0, 30.0)),
+    "join": SpatialFilter(Var("g1"), Var("g2"), dist=5.0),
+    "join_empty": SpatialFilter(Var("g1"), Var("g2"), dist=1e-12),
+    "knn1": SpatialFilter(Var("g1"), Var("g2"), knn=1),
+    "knn4": SpatialFilter(Var("g1"), Var("g2"), knn=4),
+    "knn_over": SpatialFilter(Var("g1"), Var("g2"), knn=10 ** 7),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SHAPES))
+def test_shapes_match_oracle(ds, oracle, name):
+    q = _shape_query(ds, SHAPES[name])
+    _assert_identical(StreakEngine(ds.store), oracle, q)
+
+
+@pytest.mark.parametrize("policy", [
+    BackendPolicy(join="kernel"),
+    BackendPolicy(join="fused", probe="interpret", rank="interpret",
+                  descend="interpret"),
+])
+@pytest.mark.parametrize("name", ["range", "within", "join", "knn4"])
+def test_shapes_match_oracle_across_backends(ds, oracle, name, policy):
+    q = _shape_query(ds, SHAPES[name])
+    _assert_identical(StreakEngine(ds.store, ExecConfig(policy=policy)),
+                      oracle, q)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("name", ["range", "within", "join", "knn4",
+                                  "knn_over"])
+def test_shapes_sharded_match_oracle(ds, oracle, name, n_shards):
+    q = _shape_query(ds, SHAPES[name])
+    sharded = shard_store(ds.store, n_shards)
+    _assert_identical(StreakEngine(sharded), oracle, q)
+
+
+def test_shape_results_use_canonical_order(ds):
+    """Entity-major, then distance, then remaining columns by name — fully
+    deterministic, so repeat runs are bit-identical."""
+    q = _shape_query(ds, SHAPES["join"])
+    eng = StreakEngine(ds.store)
+    s1, r1, _ = eng.execute(q)
+    s2, r2, _ = eng.execute(q)
+    np.testing.assert_array_equal(s1, s2)
+    for c in r1.keys():
+        np.testing.assert_array_equal(r1[c], r2[c])
+    a = r1["place"]
+    assert np.all(a[:-1] <= a[1:])          # entity-major order
+    grp_scores = np.flatnonzero(a[:-1] == a[1:])
+    assert np.all(s1[grp_scores] <= s1[grp_scores + 1])
+
+
+# -------------------------------------------------- S3: kNN / empty edges --
+def test_knn_short_lists_when_k_exceeds_candidates(ds, oracle):
+    q = _shape_query(ds, SHAPES["knn_over"])
+    es, erows, estats = _assert_identical(StreakEngine(ds.store), oracle, q)
+    # every driver hotel pairs with EVERY park: short of k, never padded
+    n_parks = len(np.unique(erows["nplace"]))
+    counts = np.unique(erows["place"], return_counts=True)[1]
+    assert set(counts.tolist()) == {n_parks}
+    assert estats.results_considered == erows.n
+
+
+def test_knn_empty_driven_side(ds, oracle):
+    # police entities have no "area" predicate: the driven side is empty
+    q = _shape_query(ds, SpatialFilter(Var("g1"), Var("g2"), knn=3),
+                     cls_b="class:police", extra_b=("area",))
+    es, erows, estats = _assert_identical(StreakEngine(ds.store), oracle, q)
+    assert erows.n == 0 and len(es) == 0
+    assert estats.results_considered == 0
+    assert not estats.partial
+
+
+def test_join_empty_result_is_well_formed(ds, oracle):
+    q = _shape_query(ds, SHAPES["join_empty"])
+    es, erows, estats = _assert_identical(StreakEngine(ds.store), oracle, q)
+    assert erows.n == 0 and len(es) == 0
+    assert set(erows.keys()) >= {"place", "nplace"}
+    assert estats.driver_blocks >= 1
+    assert estats.plan_log and set(estats.plan_log) == {"S"}
+
+
+def test_range_all_pruned_shards(ds, oracle):
+    """A window beyond every shard's extent: every shard's SIP material is
+    empty, yet the result is a well-formed empty relation."""
+    q = _shape_query(ds, SHAPES["range_outside"])
+    sharded = shard_store(ds.store, 4)
+    es, erows, estats = _assert_identical(StreakEngine(sharded), oracle, q)
+    assert erows.n == 0
+    assert estats.driven_rows_after_sip == 0
+
+
+def test_shape_stats_are_consistent(ds):
+    for name in ("range", "within", "join", "knn4"):
+        q = _shape_query(ds, SHAPES[name])
+        _, rows, stats = StreakEngine(ds.store).execute(q)
+        assert stats.driver_blocks >= 1
+        assert stats.plan_s == stats.driver_blocks
+        assert len(stats.plan_log) == stats.driver_blocks
+        assert stats.results_considered == rows.n
+        assert not stats.early_terminated
+
+
+def test_deadline_marks_partial_join(ds):
+    q = _shape_query(ds, SHAPES["join"])
+    eng = StreakEngine(ds.store, ExecConfig(block=8))
+    scores, rows, stats = eng.execute(
+        q, deadline=QueryDeadline(max_blocks=1))
+    assert stats.deadline_expired and stats.partial
+    full_scores, _, _ = eng.execute(q)
+    assert len(scores) <= len(full_scores)
+
+
+def test_deadline_marks_partial_knn(ds):
+    q = _shape_query(ds, SHAPES["knn4"])
+    scores, rows, stats = StreakEngine(ds.store).execute(
+        q, deadline=QueryDeadline(max_blocks=1))
+    assert stats.deadline_expired and stats.partial
+
+
+# --------------------------------------- S2: degenerate geometry handling --
+def test_pool_min_dist_coincident_points_exactly_zero(ds):
+    pool = ds.store.geom_pool
+    rows = np.arange(8, dtype=np.int64)
+    d = spatial_join.pool_min_dist(pool, rows, rows, "euclid")
+    np.testing.assert_array_equal(d, np.zeros(8))
+    keep = spatial_join.refine(rows, rows, pool, rows, rows, 0.0, "euclid")
+    assert keep.all()
+
+
+def test_pool_point_min_dist_exact_zero_and_inf(ds):
+    pool = ds.store.geom_pool
+    p = pool.points[pool.offsets[3]].astype(np.float64)
+    d = spatial_join.pool_point_min_dist(pool, np.array([3]), p)
+    assert d[0] == 0.0
+    far = spatial_join.pool_point_min_dist(pool, np.array([3]),
+                                           np.array([1e9, 1e9]))
+    assert np.isfinite(far[0]) and far[0] > 0
+
+
+def test_pool_points_in_box_zero_area_window(ds):
+    pool = ds.store.geom_pool
+    p = pool.points[pool.offsets[3]].astype(np.float64)
+    hit = spatial_join.pool_points_in_box(
+        pool, np.array([3]), (p[0], p[1], p[0], p[1]))
+    assert bool(hit[0])
+    miss = spatial_join.pool_points_in_box(
+        pool, np.array([3]), (p[0] + 1e-3, p[1], p[0] + 1e-3, p[1]))
+    assert not bool(miss[0])
+
+
+def test_within_zero_radius_at_stored_point(ds, oracle):
+    """dist=0 centered on a hotel's f32-stored point: the MBR prune layer
+    must not drop what exact refinement keeps (store MBRs cover the f32
+    pool geometry, not just the caller's f64 boxes)."""
+    store = ds.store
+    ns = ds.ns
+    # find a hotel entity and its stored first point
+    hotel_rows = store.scan(p=ns["rdf:type"], o=ns["class:hotel"])
+    ent = int(hotel_rows[0, 1])
+    row = int(store.geom_rows(np.array([ent]))[0])
+    p = store.geom_pool.points[store.geom_pool.offsets[row]].astype(
+        np.float64)
+    q = _shape_query(ds, SpatialFilter(Var("g1"), None, dist=0.0,
+                                       center=(float(p[0]), float(p[1]))))
+    es, erows, _ = _assert_identical(StreakEngine(ds.store), oracle, q)
+    assert erows.n > 0
+    assert np.all(es == 0.0)
+    assert ent in set(np.unique(erows["place"]).tolist())
+
+
+def test_mbr_join_zero_area_boxes_zero_dist():
+    """Zero-area driver/driven MBRs at the same location join at dist 0 on
+    every backend."""
+    pt = np.array([[0.25, 0.5, 0.25, 0.5]])
+    other = np.array([[0.25, 0.5, 0.25, 0.5], [0.7, 0.7, 0.7, 0.7]])
+    for backend in ("numpy", "kernel", "fused"):
+        i, j = spatial_join.mbr_distance_join(pt, other, 0.0, backend)
+        assert i.tolist() == [0] and j.tolist() == [0], backend
+
+
+# ------------------------------------- S1: compressed E-list rank mapping --
+def test_packed_elist_ranks_of_reports_gaps():
+    from repro.core.squadtree import PackedEList
+    # nodes 0..4; only nodes 1 and 3 have E-lists
+    offsets = np.array([0, 0, 2, 2, 5, 5], dtype=np.int64)
+    ids = np.array([10, 30, 20, 40, 50], dtype=np.int64)
+    obj_ids = np.array([10, 20, 30, 40, 50], dtype=np.int64)
+    p = PackedEList.encode(offsets, ids, obj_ids)
+    ranks, pos = p.ranks_of(np.arange(5, dtype=np.int64))
+    assert pos.tolist() == [1, 3]           # empty nodes are visible gaps
+    assert p.decode(ranks[:1]).tolist() == [10, 30]
+    assert p.decode(ranks[1:]).tolist() == [20, 40, 50]
+    # all-empty request
+    ranks0, pos0 = p.ranks_of(np.array([0, 2, 4], dtype=np.int64))
+    assert len(ranks0) == 0 and len(pos0) == 0
+
+
+def test_packed_elist_tree_matches_uncompressed():
+    """filter_material and per-node elist through the packed tier agree
+    with the raw CSR tier on a tree whose nodes mix empty and nonempty
+    E-lists (the silent-drop regression: a query touching an empty-E-list
+    node must not misalign the decoded lists of its neighbors)."""
+    import copy
+
+    from repro.core.squadtree import build
+    rng = np.random.default_rng(0)
+    n = 300
+    pts = rng.uniform(0.0, 100.0, (n, 2))
+    # half the objects get wide boxes so they settle on INTERNAL nodes
+    # (nonempty E-lists there), half are points (leaf-level)
+    w = np.where(np.arange(n) % 2 == 0, 8.0, 0.0)[:, None]
+    boxes = np.concatenate([pts - w, pts + w], axis=1)
+    keys = np.arange(1, n + 1, dtype=np.int64) * 7
+    cs = np.zeros(n, dtype=np.int64)
+    raw = build(keys, boxes, cs, l_max=6, leaf_capacity=8)
+    packed = copy.deepcopy(raw).pack_elists()
+    assert packed.packed is not None
+    sizes = raw.elist_offsets[1:] - raw.elist_offsets[:-1]
+    assert (sizes == 0).any() and (sizes > 0).any()   # mixed, by design
+    for node in range(len(raw.node_z)):
+        np.testing.assert_array_equal(raw.elist(node), packed.elist(node))
+    every = np.arange(len(raw.node_z), dtype=np.int64)
+    iv_r, ex_r = raw.filter_material(every)
+    iv_p, ex_p = packed.filter_material(every)
+    np.testing.assert_array_equal(np.sort(ex_r), np.sort(ex_p))
+    np.testing.assert_array_equal(iv_r, iv_p)
+
+
+# ----------------------------------------------------- serve-loop adapter --
+def test_shapes_through_serve_loop_match_serial(ds, oracle):
+    from repro.serve.spatial import SpatialServeEngine
+    queries = [_shape_query(ds, SHAPES[n])
+               for n in ("range", "within", "join", "knn4")]
+    queries.append(ds.queries[0])           # a top-k companion tenant
+    srv = SpatialServeEngine(ds.store, ExecConfig(), max_slots=3)
+    reqs = srv.serve(queries)
+    eng = StreakEngine(ds.store)
+    for req, q in zip(reqs, queries):
+        assert req.error is None
+        want_s, want_r, _ = eng.execute(q)
+        np.testing.assert_array_equal(req.scores, want_s)
+        for c in want_r.keys():
+            np.testing.assert_array_equal(req.rows[c], want_r[c])
